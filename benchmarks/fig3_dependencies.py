@@ -1,0 +1,32 @@
+"""Paper Fig. 3 + Conjecture 1: linear dependencies of (n,k) RapidRAID codes.
+
+Enumerates dependent k-subsets for n in {8, 12} (n=16 is covered at k=11 by
+table1; full n=16 enumeration for all k is hours on one core — run with
+RAPIDRAID_FULL_FIG3=1 for the complete paper figure).
+"""
+from __future__ import annotations
+
+import math
+import os
+
+from benchmarks.util import emit
+from repro.core import fault_tolerance as ft
+
+
+def main() -> None:
+    print("== Fig. 3: dependent k-subsets (natural dependencies) ==")
+    ns = (8, 12, 16) if os.environ.get("RAPIDRAID_FULL_FIG3") else (8, 12)
+    for n in ns:
+        for k in range(n // 2, n):
+            dep = ft.natural_dependencies(n, k, l=16, trials=2)
+            total = math.comb(n, k)
+            pct = 100 * (1 - len(dep) / total)
+            mds = "MDS" if not dep else f"{len(dep)} dependent"
+            conj = "k>=n-3" if k >= n - 3 else "k<n-3"
+            print(f"  ({n:2d},{k:2d}): {pct:6.2f}% independent ({mds}; {conj})")
+            emit("fig3", {"n": n, "k": k, "dependent": len(dep),
+                          "total": total, "pct_indep": round(pct, 2)})
+
+
+if __name__ == "__main__":
+    main()

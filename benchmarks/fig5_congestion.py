@@ -1,0 +1,69 @@
+"""Paper Fig. 5: coding times under network congestion.
+
+netsim sweep over the number of congested nodes (500 Mbps + 100 ms, the
+paper's netem profile). Three schemes:
+
+  classical      — star encode; the coder is drawn uniformly, so with c
+                   congested nodes the chance the bottleneck sits on the
+                   coder/star path grows sharply (the paper's "major impact
+                   of a single congested node")
+  rapidraid      — chain encode, canonical order
+  rapidraid+reorder — straggler mitigation: order_chain puts congested
+                   nodes at the chain ends where they carry one flow
+                   instead of two (storage.chain.order_chain)
+
+Averages over random congested sets / coder choices, like the paper's
+error-bar runs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import netsim
+from benchmarks.util import emit
+from repro.storage.chain import order_chain
+
+N, K = 16, 11
+TRIALS = 48
+
+
+def sweep(max_congested: int = 4, seed: int = 0) -> list[dict]:
+    cfg = netsim.NetConfig()
+    rng = np.random.default_rng(seed)
+    rows = []
+    for c in range(max_congested + 1):
+        t_cec, t_rr, t_rr_ro = [], [], []
+        for _ in range(TRIALS):
+            congested = frozenset(
+                rng.choice(N, size=c, replace=False).tolist())
+            coder = int(rng.integers(N))
+            t_cec.append(netsim.classical_time(cfg, congested, coder=coder,
+                                               k=K, m=N - K))
+            t_rr.append(netsim.pipeline_time(cfg, congested, n=N, k=K))
+            speeds = np.asarray([netsim.node_bw(cfg, congested, i)
+                                 for i in range(N)])
+            order = order_chain(speeds, N, K)
+            t_rr_ro.append(netsim.pipeline_time(cfg, congested, order=order,
+                                                n=N, k=K))
+        rows.append({
+            "congested": c,
+            "classical_s": round(float(np.mean(t_cec)), 2),
+            "classical_sd": round(float(np.std(t_cec)), 2),
+            "rapidraid_s": round(float(np.mean(t_rr)), 2),
+            "rapidraid_reorder_s": round(float(np.mean(t_rr_ro)), 2),
+        })
+    return rows
+
+
+def main() -> None:
+    print("== Fig. 5: coding time vs #congested nodes (500 Mbps +100 ms) ==")
+    print(f"  {'c':>2} {'classical':>12} {'rapidraid':>12} {'rr+reorder':>12}")
+    for row in sweep():
+        print(f"  {row['congested']:2d} {row['classical_s']:9.2f}s"
+              f" (sd {row['classical_sd']:4.2f}) {row['rapidraid_s']:9.2f}s"
+              f" {row['rapidraid_reorder_s']:9.2f}s")
+        emit("fig5", row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Discrete/fluid network simulator for the paper's cluster experiments.
+
+The container has one CPU and no real network, so the paper's testbed
+(50 ThinClients / EC2, 1 Gbps links, netem congestion) is modeled as a
+max-min-fair fluid network:
+
+* every node has one NIC of capacity ``bw``; a *congested* node's effective
+  capacity drops to ``congested_bw`` and each of its transfers pays
+  ``congested_latency`` per block/chunk (netem's 500 Mbps + 100 ms);
+* a NIC's capacity is shared by all concurrent flows touching the node
+  (``duplex=2.0`` would model ideal full duplex; 1.0 models the effective
+  shared capacity netem congestion induces);
+* classical (CEC) encoding is the star topology of Fig. 1: the coding node
+  pulls k blocks concurrently, computes, and pushes m-1 parities;
+* pipelined (RapidRAID) encoding is the chain of Fig. 2 streamed at chunk
+  granularity: throughput = the slowest link, plus a pipeline-fill term —
+  Eq. (2)'s T = tau_block + (n-1) tau_chunk generalized to heterogeneous
+  links.
+
+The simulator is validated against Eq. (1)/(2) in tests/test_netsim.py and
+cross-checked against real multi-device wall-clock in fig4.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    n_nodes: int = 16
+    bw: float = 125e6               # 1 Gbps in bytes/s
+    congested_bw: float = 62.5e6    # 500 Mbps
+    latency: float = 0.2e-3
+    congested_latency: float = 0.1  # netem +100 ms
+    block_bytes: float = 64e6       # GFS/HDFS default block
+    chunk_bytes: float = 1e6        # pipeline streaming granularity
+    duplex: float = 2.0             # healthy NIC: full duplex (in+out pool);
+    #                                 congested NICs degrade to a shared
+    #                                 medium (factor 1.0) — netem behavior
+    cec_overlap: float = 0.0        # CEC download/upload overlap: the
+    #                                 paper's CEC buffers the whole object
+    #                                 (the atomicity it criticizes); Eq. (1)
+    #                                 is its best case (overlap=1)
+    cec_encode_rate: float | None = 200e6  # bytes/s whole-object encode on
+    #                                 the coder (paper Table II: 704 MB in
+    #                                 ~3.5 s on Xeon). Serializes between
+    #                                 CEC's phases. RapidRAID's encode
+    #                                 streams per chunk, overlapped (and is
+    #                                 cheaper per byte, Table II), so the
+    #                                 chain model carries no encode term.
+    #                                 None => idealized Eq. (1) CEC.
+
+
+def node_cap(cfg: NetConfig, congested: frozenset, i: int) -> float:
+    """Total NIC capacity pooled over in+out flows."""
+    if i in congested:
+        return cfg.congested_bw            # shared medium under congestion
+    return cfg.bw * cfg.duplex
+
+
+def node_bw(cfg: NetConfig, congested: frozenset, i: int) -> float:
+    return cfg.congested_bw if i in congested else cfg.bw
+
+
+def node_lat(cfg: NetConfig, congested: frozenset, i: int) -> float:
+    return cfg.congested_latency if i in congested else cfg.latency
+
+
+# ---------------------------------------------------------------------------
+# max-min fair fluid completion of a set of equal-size flows
+# ---------------------------------------------------------------------------
+
+
+def _maxmin_rates(flows: list[tuple], caps: dict[int, float]):
+    """Max-min fair rates for flows (src, dst, *id) under per-node capacity.
+
+    Flow keys may carry extra id fields so identical (src, dst) pairs from
+    different objects remain distinct flows.
+    """
+    rates = {f: 0.0 for f in flows}
+    active = set(flows)
+    cap = dict(caps)
+    while active:
+        share = {}
+        for node in cap:
+            n_fl = sum(1 for f in active if node in f[:2])
+            if n_fl:
+                share[node] = cap[node] / n_fl
+        if not share:
+            break
+        bneck = min(share, key=share.get)
+        r = share[bneck]
+        frozen = [f for f in active if bneck in f[:2]]
+        for f in frozen:
+            rates[f] = r
+            active.discard(f)
+            for node in set(f[:2]):
+                cap[node] -= r
+        cap.pop(bneck, None)
+    return rates
+
+
+def _fluid_completion(flows, caps, size: float) -> float:
+    """Completion time of equal-size flows with rate re-sharing on finish."""
+    remaining = {f: size for f in flows}
+    t = 0.0
+    while remaining:
+        rates = _maxmin_rates(list(remaining), caps)
+        dt = min(remaining[f] / rates[f] for f in remaining if rates[f] > 0)
+        for f in list(remaining):
+            remaining[f] -= rates[f] * dt
+            if remaining[f] <= 1e-6:
+                del remaining[f]
+        t += dt
+    return t
+
+
+# ---------------------------------------------------------------------------
+# classical (star) encode — Fig. 1 / Eq. (1)
+# ---------------------------------------------------------------------------
+
+
+def classical_time(cfg: NetConfig, congested=frozenset(), coder: int = 0,
+                   k: int = 11, m: int = 5, n_objects: int = 1) -> float:
+    """Coding time per object (the coder holds block 0 locally, so k-1
+    downloads + m-1 uploads; streamlined => download/upload overlap).
+
+    n_objects > 1 models the paper's concurrent batch: every node is the
+    coder of one object with random (HDFS-style) replica placement, so NIC
+    loads collide stochastically — the star scheme's structural
+    disadvantage vs deterministic, perfectly balanced chains.
+
+    The download and upload phases serialize per ``cec_overlap`` (0 = the
+    whole-object buffering of real CEC implementations; 1 = the idealized
+    streamlined best case of Eq. (1))."""
+    congested = frozenset(congested)
+    caps = {i: node_cap(cfg, congested, i) for i in range(cfg.n_nodes)}
+    if n_objects == 1:
+        srcs = [i for i in range(cfg.n_nodes) if i != coder][: k - 1]
+        dsts = [i for i in range(cfg.n_nodes)
+                if i != coder and i not in srcs][: m - 1]
+        down = [(s, coder, j) for j, s in enumerate(srcs)]
+        up = [(coder, d, j) for j, d in enumerate(dsts)]
+        lat = max(node_lat(cfg, congested, s)
+                  for s in srcs + dsts + [coder])
+    else:
+        rng = np.random.default_rng(1234 + n_objects)
+        down, up = [], []
+        nn = cfg.n_nodes
+        for obj in range(n_objects):
+            c = obj % nn
+            others = [i for i in range(nn) if i != c]
+            srcs = rng.choice(others, size=k - 1, replace=False)
+            dsts = rng.choice(others, size=m - 1, replace=False)
+            down += [(int(s), c, obj, j) for j, s in enumerate(srcs)]
+            up += [(c, int(d), obj, k + j) for j, d in enumerate(dsts)]
+        lat = max(node_lat(cfg, congested, i) for i in range(nn))
+    t_down = _fluid_completion(down, caps, cfg.block_bytes)
+    t_up = _fluid_completion(up, caps, cfg.block_bytes)
+    ov = cfg.cec_overlap
+    t_enc = (k * cfg.block_bytes / cfg.cec_encode_rate
+             if cfg.cec_encode_rate else 0.0)
+    return t_down + t_up - ov * min(t_down, t_up) + t_enc + lat
+
+
+# ---------------------------------------------------------------------------
+# pipelined (chain) encode — Fig. 2 / Eq. (2)
+# ---------------------------------------------------------------------------
+
+
+def pipeline_time(cfg: NetConfig, congested=frozenset(),
+                  order: np.ndarray | None = None, n: int = 16, k: int = 11,
+                  n_objects: int = 1) -> float:
+    """Chain encode: node order[p] plays chain position p."""
+    congested = frozenset(congested)
+    if order is None:
+        order = np.arange(n)
+    caps = {i: node_cap(cfg, congested, i) / n_objects
+            for i in range(cfg.n_nodes)}
+    # per-link rate: sender and receiver NICs are shared between this link
+    # and the node's other chain link (interior nodes carry 2 flows)
+    def nic_share(pos: int) -> float:
+        i = int(order[pos])
+        n_flows = (1 if pos in (0, n - 1) else 2)
+        return caps[i] / n_flows
+
+    link_rates = [min(nic_share(p), nic_share(p + 1)) for p in range(n - 1)]
+    chunk = cfg.chunk_bytes
+    n_chunks = cfg.block_bytes / chunk
+    # fill: first chunk traverses the chain while the network is not yet
+    # saturated (charge single-object NIC shares even when n_objects > 1)
+    fill_rate = [r * n_objects for r in link_rates]
+    fill = sum(chunk / r + node_lat(cfg, congested, int(order[p + 1]))
+               for p, r in enumerate(fill_rate))
+    steady = (n_chunks - 1) * chunk / min(link_rates)
+    return fill + steady
+
+
+def eq1_classical(cfg: NetConfig, k: int = 11, m: int = 5) -> float:
+    """Paper Eq. (1) best case: tau_block * max(k, m-1), coder NIC-bound;
+    the coder holds one block locally."""
+    tau_block = cfg.block_bytes / (cfg.bw * cfg.duplex)
+    return tau_block * max(k - 1, m - 1)
+
+
+def eq2_pipeline(cfg: NetConfig, n: int = 16) -> float:
+    """Paper Eq. (2): tau_block + (n-1) tau_chunk (interior NICs carry an
+    in and an out flow from the shared pool)."""
+    rate = cfg.bw * cfg.duplex / 2
+    return cfg.block_bytes / rate + (n - 1) * cfg.chunk_bytes / rate

@@ -1,0 +1,78 @@
+"""Roofline aggregator: runs/dryrun/*.json -> the EXPERIMENTS.md table.
+
+Single-pod (16x16) artifacts carry the corrected per-device cost terms;
+2x16x16 artifacts are the multi-pod compile proof. Emits a markdown table
+and a CSV stream.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.util import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "runs/dryrun")
+
+
+def load_cells(mesh_tag: str = "16x16") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"*__{mesh_tag}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def markdown_table(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "bound | useful | MFU |\n|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in cells:
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']*1e3:.1f} | "
+            f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} | "
+            f"{r['bound']} | {r['useful_ratio']:.2f} | {r['mfu']*100:.1f}% |")
+    return hdr + "\n".join(rows)
+
+
+def main() -> None:
+    cells = load_cells("16x16")
+    if not cells:
+        print("no dry-run artifacts found; run repro.launch.dryrun first")
+        return
+    print(f"== Roofline ({len(cells)} single-pod cells) ==")
+    print(markdown_table(cells))
+    for c in cells:
+        r = c["roofline"]
+        emit("roofline", {
+            "arch": c["arch"], "shape": c["shape"], "bound": r["bound"],
+            "compute_ms": round(r["compute_s"] * 1e3, 1),
+            "memory_ms": round(r["memory_s"] * 1e3, 1),
+            "collective_ms": round(r["collective_s"] * 1e3, 1),
+            "mfu_pct": round(r["mfu"] * 100, 1)})
+    pod2 = load_cells("2x16x16")
+    print(f"\nmulti-pod (2x16x16) compiles: {len(pod2)} cells OK")
+
+    # optimized variants (hillclimb artifacts): --layout / --moe-chunk /
+    # --no-remat runs, stored under runs/dryrun_opt and tagged filenames
+    opt = []
+    for d in (DRYRUN_DIR, os.path.join(os.path.dirname(DRYRUN_DIR),
+                                       "dryrun_opt")):
+        for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+            base = os.path.basename(path)
+            if base.count("__") >= 3 or "dryrun_opt" in path:
+                with open(path) as f:
+                    opt.append((base[:-5], json.load(f)))
+    if opt:
+        print("\noptimized variants (EXPERIMENTS.md §Perf):")
+        for name, c in opt:
+            r = c["roofline"]
+            print(f"  {name}: compute={r['compute_s']*1e3:.1f}ms "
+                  f"coll={r['collective_s']*1e3:.1f}ms {r['bound']}-bound "
+                  f"MFU={r['mfu']*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

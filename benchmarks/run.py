@@ -1,0 +1,57 @@
+"""Benchmark driver: one module per paper table/figure + the roofline.
+
+  table1_resilience   Table I   static resilience (number of 9s)
+  fig3_dependencies   Fig. 3    linear dependencies of (n,k) codes
+  table2_cpu_cost     Table II  single-node CPU coding cost
+  fig4_coding_times   Fig. 4    single/concurrent-object coding times
+  fig5_congestion     Fig. 5    coding times under congestion
+  roofline            EXPERIMENTS.md roofline table from dry-run artifacts
+
+``python -m benchmarks.run [--only name]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (chain_tuning, fig3_dependencies, fig4_coding_times,
+                        fig5_congestion, roofline, table1_resilience,
+                        table2_cpu_cost)
+
+MODULES = [
+    ("table1_resilience", table1_resilience),
+    ("fig3_dependencies", fig3_dependencies),
+    ("table2_cpu_cost", table2_cpu_cost),
+    ("fig4_coding_times", fig4_coding_times),
+    ("fig5_congestion", fig5_congestion),
+    ("chain_tuning", chain_tuning),
+    ("roofline", roofline),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    failures = []
+    for name, mod in MODULES:
+        if args.only and args.only != name:
+            continue
+        print(f"\n{'='*72}\n{name}\n{'='*72}", flush=True)
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+        print(f"[{name}: {time.time()-t0:.1f}s]", flush=True)
+    if failures:
+        print("\nFAILED:", ", ".join(failures))
+        return 1
+    print("\nall benchmarks OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Benchmark helpers: robust timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock seconds of fn(*args) (jax-aware)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(table: str, row: dict) -> None:
+    print(f"CSV,{table}," + ",".join(f"{k}={v}" for k, v in row.items()),
+          flush=True)

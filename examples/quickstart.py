@@ -1,0 +1,62 @@
+"""Quickstart: RapidRAID codes in five minutes.
+
+  1. build a (16,11) RapidRAID code, encode an object, decode from failures
+  2. compare with the classical Cauchy-RS baseline
+  3. archive a (tiny) model checkpoint through the two-tier store
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+from repro.core import classical, fault_tolerance, rapidraid
+
+# --- 1. the code itself ----------------------------------------------------
+code = rapidraid.make_code(n=16, k=11, l=16, seed=0)
+print(f"(16,11) RapidRAID over GF(2^16): storage overhead "
+      f"{code.storage_overhead:.2f}x (vs 2x replication)")
+
+rng = np.random.default_rng(0)
+obj = rng.integers(0, 1 << 16, size=(11, 4096)).astype(np.uint16)
+coded = rapidraid.encode_np(code, obj)                 # (16, 4096)
+
+# lose any 5 of the 16 nodes -> still decodable from the surviving 11
+survivors = [0, 2, 3, 5, 6, 8, 9, 11, 12, 14, 15]
+decoded = rapidraid.decode_np(code, survivors, coded[survivors])
+assert np.array_equal(decoded, obj)
+print(f"decoded exactly from survivors {survivors}")
+
+# the pipelined (chain) encode produces the same codeword, chunk-streamed
+chain_out, ticks = rapidraid.pipeline_encode_local(code, obj, num_chunks=8)
+assert np.array_equal(chain_out, coded)
+print(f"chain encode matches matrix encode ({ticks} pipeline ticks, "
+      f"Eq.(2): C + n - 1 = {8 + 16 - 1})")
+
+# --- 2. classical baseline -------------------------------------------------
+cec = classical.make_code(16, 11, l=16)
+parity = classical.encode_np(cec, obj)
+full = np.concatenate([obj, parity])
+assert np.array_equal(
+    classical.decode_np(cec, survivors, full[survivors]), obj)
+dep = fault_tolerance.dependent_ksubsets(code.G, 11, 16)
+print(f"RapidRAID dependent 11-subsets: {len(dep)} / 4368 "
+      f"(classical MDS: 0 — the paper's Table I trade-off)")
+
+# --- 3. checkpoint archival ------------------------------------------------
+with tempfile.TemporaryDirectory() as tmp:
+    mgr = CheckpointManager(CheckpointConfig(root=tmp, hot_keep=0))
+    state = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64)),
+             "step": np.int64(1000)}
+    mgr.save(1000, state)
+    print(f"checkpoint tier: {mgr.tier(1000)} "
+          f"(hot replicas migrated to coded blocks)")
+    for i in (1, 4, 7, 10, 13):
+        mgr.store.fail_node(i)
+    restored = mgr.restore(1000, state)
+    assert np.allclose(restored["w"], np.asarray(state["w"]))
+    print("restored exactly after 5 simultaneous node failures")
+print("quickstart OK")

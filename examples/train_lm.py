@@ -1,0 +1,84 @@
+"""End-to-end driver: train a ~100M-param qwen3-family LM with the full
+production stack — deterministic data pipeline, AdamW, activation-sharded
+train step, two-tier checkpointing with RapidRAID archival.
+
+The default recipe is sized for this container's single CPU core
+(~25M params, 200 steps on a learnable synthetic corpus — watch the loss
+fall). ``--full`` selects the ~100M/seq-512 recipe (same code path; run it
+on real accelerators).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+from repro.data import pipeline as data_lib
+from repro.launch.train import run_training
+from repro.models.model import ModelConfig
+from repro.optim import adamw
+
+
+def recipe(full: bool) -> tuple[ModelConfig, int, int]:
+    if full:
+        cfg = ModelConfig(
+            name="qwen3-100m", family="dense", n_layers=10, d_model=640,
+            n_heads=10, n_kv_heads=5, head_dim=64, d_ff=2560, vocab=50_000,
+            qk_norm=True, rope_theta=1e6, remat=False)
+        return cfg, 512, 16
+    cfg = ModelConfig(
+        name="qwen3-25m", family="dense", n_layers=6, d_model=384,
+        n_heads=6, n_kv_heads=3, head_dim=64, d_ff=1536, vocab=8_192,
+        qk_norm=True, rope_theta=1e6, remat=False,
+        q_chunk=128, kv_chunk=128)
+    return cfg, 128, 8
+
+
+def synthetic_corpus(path: str, vocab: int, n_tokens: int = 400_000) -> str:
+    """Order-2 Markov chain: enough structure for visible learning."""
+    rng = np.random.default_rng(0)
+    a, b = 613, 211
+    toks = np.zeros(n_tokens, dtype=np.uint16)
+    toks[0], toks[1] = rng.integers(vocab, size=2)
+    noise = rng.random(n_tokens)
+    for i in range(2, n_tokens):
+        if noise[i] < 0.1:                # 10% noise keeps CE > 0
+            toks[i] = rng.integers(vocab)
+        else:
+            toks[i] = (a * int(toks[i - 1]) + b * int(toks[i - 2])) % vocab
+    data_lib.write_corpus(path, toks)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-root", default="")
+    args = ap.parse_args()
+
+    cfg, seq, batch = recipe(args.full)
+    n_params = cfg.param_count()
+    print(f"model {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"seq {seq}, global batch {batch}")
+
+    with tempfile.TemporaryDirectory() as tmp:
+        corpus = synthetic_corpus(f"{tmp}/corpus.bin", cfg.vocab)
+        dcfg = data_lib.DataConfig(vocab=cfg.vocab, seq=seq,
+                                   global_batch=batch, path=corpus)
+        ocfg = adamw.OptConfig(peak_lr=1e-3, warmup_steps=20,
+                               total_steps=args.steps)
+        ckpt_root = args.ckpt_root or f"{tmp}/ckpt"
+        ckpt = CheckpointManager(CheckpointConfig(root=ckpt_root, hot_keep=1))
+        out = run_training(cfg, ocfg, dcfg, args.steps, ckpt=ckpt,
+                           save_every=max(args.steps // 4, 10), log_every=10)
+        print(f"\nfinal loss {out['final_loss']:.3f} "
+              f"(start {out['history'][0]['loss']:.3f}); "
+              f"checkpoints: {[(s, ckpt.tier(s)) for s in ckpt.steps()]}")
+
+
+if __name__ == "__main__":
+    main()

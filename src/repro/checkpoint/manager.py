@@ -1,0 +1,107 @@
+"""Checkpoint manager: training-facing API over the two-tier store.
+
+Lifecycle a 1000-node cluster would run (all simulated faithfully here):
+
+  save(step, state)            -> hot tier: 2 replicas over n nodes
+                                  (pipelined insertion layout, paper §V)
+  archive(step)                -> RapidRAID pipelined migration; 2x -> 1.45x
+  restore(step, like)          -> from hot if present, else decode any k of n
+  restore_latest(like)         -> newest restorable step (crash recovery)
+  manager.store.fail_node(i)   -> simulate node loss; restore still works
+  repair(step)                 -> re-materialize lost coded blocks
+
+Elasticity: ``restore`` returns host numpy arrays; ``place`` re-shards them
+onto ANY mesh (the new cluster shape after failures), so a job can resume
+on a different topology than it checkpointed from.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.storage import archive as arc
+from repro.storage import object_store as obj
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    root: str
+    n: int = 16
+    k: int = 11
+    l: int = 16
+    seed: int = 0
+    hot_keep: int = 2          # newest checkpoints kept hot (replicated)
+    archive_old: bool = True   # migrate older checkpoints to RapidRAID
+
+
+class CheckpointManager:
+    def __init__(self, ccfg: CheckpointConfig):
+        self.ccfg = ccfg
+        self.acfg = arc.ArchiveConfig(n=ccfg.n, k=ccfg.k, l=ccfg.l,
+                                      seed=ccfg.seed)
+        self.store = obj.NodeStore(ccfg.root, ccfg.n)
+
+    # -- write path --------------------------------------------------------
+
+    def save(self, step: int, state, node_speeds=None) -> dict:
+        """Hot-save ``state`` (any pytree); auto-archive older steps."""
+        blob = obj.tree_to_bytes(state)
+        # 64-byte lanes: whole uint32 packing lanes for GF(2^8/16) AND a
+        # block length divisible by the pipeline chunk count
+        blocks = obj.split_blocks(blob, self.ccfg.k, lane_bytes=64)
+        manifest = arc.hot_save(self.store, step, blocks, self.acfg)
+        manifest["blob_len"] = len(blob)
+        arc._put_manifest(self.store, step, manifest)
+        if self.ccfg.archive_old:
+            self._migrate_old(node_speeds)
+        return manifest
+
+    def archive(self, step: int, node_speeds=None) -> dict:
+        return arc.archive_step(self.store, step, self.acfg,
+                                node_speeds=node_speeds)
+
+    def _migrate_old(self, node_speeds=None) -> None:
+        steps = arc.list_steps(self.store)
+        for s in steps[: -self.ccfg.hot_keep or None]:
+            m = arc.get_manifest(self.store, s)
+            if m["tier"] == "hot":
+                self.archive(s, node_speeds=node_speeds)
+
+    # -- read path ----------------------------------------------------------
+
+    def restore(self, step: int, like):
+        """Rebuild the pytree (host numpy) for ``step``; tolerates n-k lost
+        nodes in the archive tier / one replica set in the hot tier."""
+        manifest = arc.get_manifest(self.store, step)
+        blocks = arc.restore_blocks(self.store, step, self.acfg)
+        blob = obj.join_blocks(blocks, manifest["blob_len"])
+        return obj.bytes_to_leaves(blob, like)
+
+    def restore_latest(self, like):
+        """Newest restorable step (skips unrecoverable ones). Returns
+        (step, state) or (None, None)."""
+        for step in reversed(arc.list_steps(self.store)):
+            try:
+                return step, self.restore(step, like)
+            except (FileNotFoundError, AssertionError):
+                continue
+        return None, None
+
+    def repair(self, step: int, replacement_nodes=None) -> list[int]:
+        return arc.repair(self.store, step, self.acfg,
+                          replacement_nodes=replacement_nodes)
+
+    def steps(self) -> list[int]:
+        return arc.list_steps(self.store)
+
+    def tier(self, step: int) -> str:
+        return arc.get_manifest(self.store, step)["tier"]
+
+
+def place(tree, shardings):
+    """Put restored host arrays onto devices with the given shardings —
+    the elastic-restart hook (new mesh shape is fine)."""
+    return jax.tree.map(
+        lambda a, s: jax.device_put(np.asarray(a), s), tree, shardings)

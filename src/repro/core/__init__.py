@@ -1,0 +1,7 @@
+# The paper's primary contribution: RapidRAID pipelined erasure codes.
+#   gf.py              GF(2^l) arithmetic (host, jnp, packed bit-plane)
+#   rapidraid.py       code construction (Eqs 3-4), encode/decode, chain schedule
+#   classical.py       Cauchy Reed-Solomon baseline (the paper's CEC)
+#   fault_tolerance.py k-subset rank analysis, static resilience (Fig 3, Table I)
+#   pipeline.py        generic chunked chain-pipeline scheduler (scan + ppermute)
+from repro.core import classical, fault_tolerance, gf, rapidraid  # noqa: F401

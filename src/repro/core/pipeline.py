@@ -1,0 +1,68 @@
+"""Generic chunked chain-pipeline scheduler (paper §III, Fig. 2).
+
+The paper's insight: a chain of n nodes streaming a block at network-buffer
+granularity costs ``T = tau_block + (n-1) * tau_buf`` instead of the classical
+``tau_block * max(k, m-1)``. The same software-pipeline schedule shows up in
+GPipe-style pipeline parallelism; this module is the shared scheduler used by
+
+  * ``repro.storage.chain``   — RapidRAID pipelined archival over devices
+  * ``repro.train.pipeline``  — optional pipeline-parallel stage axis
+
+Semantics (SPMD over a 1-D ``axis_name`` of size n):
+  tick t in [0, S + n - 1):  stage i processes chunk ch = t - i when valid,
+  receives its predecessor's wire from the previous tick (stage 0 receives
+  zeros), and forwards a wire to stage i+1 via ``lax.ppermute``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def num_ticks(num_chunks: int, n_stages: int) -> int:
+    return num_chunks + n_stages - 1
+
+
+def chain_perm(n: int) -> list[tuple[int, int]]:
+    """Source→dest pairs for a non-wrapping chain: i -> i+1."""
+    return [(i, i + 1) for i in range(n - 1)]
+
+
+def software_pipeline(
+    step_fn: Callable,
+    wire_init: jax.Array,
+    out_init,
+    num_chunks: int,
+    axis_name: str,
+):
+    """Run the chain pipeline inside a ``shard_map``-ed function.
+
+    ``step_fn(wire_in, out, ch, active) -> (wire_out, out)`` computes one
+    chunk: consumes the predecessor's wire (zeros at stage 0 and at inactive
+    ticks' boundary), updates the output accumulator, and produces the wire to
+    forward. ``out`` may be any pytree.
+
+    Returns the final ``out`` after ``num_chunks + n - 1`` ticks.
+    """
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    perm = chain_perm(n)
+
+    def tick(carry, t):
+        wire, out = carry
+        ch = t - idx
+        active = (ch >= 0) & (ch < num_chunks)
+        ch_safe = jnp.clip(ch, 0, num_chunks - 1)
+        wire_in = jnp.where(idx == 0, jnp.zeros_like(wire), wire)
+        wire_out, out = step_fn(wire_in, out, ch_safe, active)
+        wire_next = lax.ppermute(wire_out, axis_name, perm)
+        return (wire_next, out), None
+
+    # carries are device-varying under shard_map's manual-axes tracking
+    carry0 = jax.tree.map(lambda x: lax.pcast(x, (axis_name,), to="varying"),
+                          (wire_init, out_init))
+    (_, out), _ = lax.scan(tick, carry0, jnp.arange(num_ticks(num_chunks, n)))
+    return out

@@ -1,0 +1,239 @@
+"""RapidRAID pipelined erasure codes (paper §IV–V).
+
+A RapidRAID (n, k) code, n <= 2k, archives an object of k blocks that is
+initially stored as TWO replicas overlapped over n nodes:
+
+  * replica 1 on nodes 0..k-1        (node i holds block i)
+  * replica 2 on nodes n-k..n-1      (node n-k+i holds block i)
+
+(for n == 2k the replicas are disjoint; for n < 2k the middle 2k-n nodes hold
+two blocks each — the paper's (6,4) example).
+
+The encoding is a chain: node i receives the running combination x_{i-1,i}
+from its predecessor and
+
+  x_{i,i+1} = x_{i-1,i} + sum_{o_j in node i} o_j * psi   (Eq. 3, forwarded)
+  c_i       = x_{i-1,i} + sum_{o_j in node i} o_j * xi    (Eq. 4, kept)
+
+with one fresh psi/xi coefficient per (node, local block) slot. The resulting
+code is linear and non-systematic; its (n x k) generator matrix is built here
+by unrolling the recursion symbolically over GF(2^l).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf
+
+
+def placement(n: int, k: int) -> tuple[tuple[int, ...], ...]:
+    """Blocks (0-based ids) held by each of the n nodes before archival."""
+    if not k <= n <= 2 * k:
+        raise ValueError(f"need k <= n <= 2k, got (n={n}, k={k})")
+    nodes = []
+    for i in range(n):
+        blocks = []
+        if i < k:
+            blocks.append(i)
+        if i >= n - k:
+            blocks.append(i - (n - k))
+        nodes.append(tuple(blocks))
+    return tuple(nodes)
+
+
+def coeff_slots(n: int, k: int) -> tuple[int, int]:
+    """Number of (psi, xi) coefficients: one per (node, block) slot.
+
+    The last node never forwards, so it consumes no psi slots.
+    """
+    place = placement(n, k)
+    n_xi = sum(len(b) for b in place)
+    n_psi = n_xi - len(place[-1])
+    return n_psi, n_xi
+
+
+def build_generator(n: int, k: int, psi, xi, l: int) -> np.ndarray:
+    """Unroll Eqs. (3)-(4) into the (n x k) generator matrix over GF(2^l)."""
+    place = placement(n, k)
+    n_psi, n_xi = coeff_slots(n, k)
+    psi = np.asarray(psi, dtype=np.int64)
+    xi = np.asarray(xi, dtype=np.int64)
+    assert psi.shape == (n_psi,) and xi.shape == (n_xi,), (psi.shape, xi.shape)
+    G = np.zeros((n, k), dtype=np.int64)
+    x = np.zeros(k, dtype=np.int64)  # coefficients of the forwarded combination
+    pi = ci = 0
+    for i in range(n):
+        row = x.copy()
+        for b in place[i]:
+            row[b] ^= xi[ci]
+            ci += 1
+        G[i] = row
+        if i < n - 1:
+            for b in place[i]:
+                x[b] ^= psi[pi]
+                pi += 1
+    assert pi == n_psi and ci == n_xi
+    return G.astype(gf.WORD_DTYPE[l])
+
+
+@dataclasses.dataclass(frozen=True)
+class RapidRAIDCode:
+    n: int
+    k: int
+    l: int
+    psi: tuple[int, ...]
+    xi: tuple[int, ...]
+
+    @functools.cached_property
+    def place(self) -> tuple[tuple[int, ...], ...]:
+        return placement(self.n, self.k)
+
+    @functools.cached_property
+    def G(self) -> np.ndarray:
+        return build_generator(self.n, self.k, self.psi, self.xi, self.l)
+
+    @functools.cached_property
+    def chain(self) -> "ChainSchedule":
+        return chain_schedule(self)
+
+    @property
+    def storage_overhead(self) -> float:
+        return self.n / self.k
+
+
+def make_code(n: int, k: int, l: int = 16, seed: int = 0) -> RapidRAIDCode:
+    """Draw nonzero psi/xi coefficients from a seeded PRNG (paper §V-A)."""
+    n_psi, n_xi = coeff_slots(n, k)
+    rng = np.random.default_rng(seed)
+    q = 1 << l
+    psi = tuple(int(v) for v in rng.integers(1, q, size=n_psi))
+    xi = tuple(int(v) for v in rng.integers(1, q, size=n_xi))
+    return RapidRAIDCode(n=n, k=k, l=l, psi=psi, xi=xi)
+
+
+# ---------------------------------------------------------------------------
+# Encoding / decoding (single-process; the distributed path is repro.storage)
+# ---------------------------------------------------------------------------
+
+def encode(code: RapidRAIDCode, data: jnp.ndarray) -> jnp.ndarray:
+    """Matrix-form encode: data (k, B) words -> codeword blocks (n, B)."""
+    assert data.shape[0] == code.k
+    return gf.gf_matmul(code.G, data, code.l)
+
+
+def encode_np(code: RapidRAIDCode, data: np.ndarray) -> np.ndarray:
+    return gf.gf_matmul_np(code.G, data, code.l)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSchedule:
+    """Dense per-node view of the chain used by the distributed runtime.
+
+    Every node is padded to ``max_blocks`` local blocks; padded slots carry
+    coefficient 0 so they contribute nothing.
+    """
+    n: int
+    k: int
+    l: int
+    max_blocks: int
+    local_blocks: np.ndarray   # (n, max_blocks) int32 block id (0 for padding)
+    block_valid: np.ndarray    # (n, max_blocks) bool
+    psi: np.ndarray            # (n, max_blocks) word, 0-padded; row n-1 all 0
+    xi: np.ndarray             # (n, max_blocks) word, 0-padded
+
+
+def chain_schedule(code: RapidRAIDCode) -> ChainSchedule:
+    place = placement(code.n, code.k)
+    mb = max(len(b) for b in place)
+    dt = gf.WORD_DTYPE[code.l]
+    local = np.zeros((code.n, mb), dtype=np.int32)
+    valid = np.zeros((code.n, mb), dtype=bool)
+    psi = np.zeros((code.n, mb), dtype=dt)
+    xi = np.zeros((code.n, mb), dtype=dt)
+    pi = ci = 0
+    for i, blocks in enumerate(place):
+        for s, b in enumerate(blocks):
+            local[i, s] = b
+            valid[i, s] = True
+            xi[i, s] = code.xi[ci]
+            ci += 1
+            if i < code.n - 1:
+                psi[i, s] = code.psi[pi]
+                pi += 1
+    return ChainSchedule(n=code.n, k=code.k, l=code.l, max_blocks=mb,
+                         local_blocks=local, block_valid=valid, psi=psi, xi=xi)
+
+
+def pipeline_encode_local(code: RapidRAIDCode, data: np.ndarray,
+                          num_chunks: int = 4) -> tuple[np.ndarray, int]:
+    """Chunk-granular simulation of the chain (oracle for repro.storage.chain).
+
+    Walks the pipeline schedule tick by tick exactly as the distributed
+    runtime does: at tick t node i processes chunk t - i. Returns the codeword
+    blocks and the number of ticks (= num_chunks + n - 1).
+    """
+    n, k, l = code.n, code.k, code.l
+    sched = code.chain
+    B = data.shape[1]
+    assert data.shape == (k, B) and B % num_chunks == 0
+    S = B // num_chunks
+    out = np.zeros((n, B), dtype=gf.WORD_DTYPE[l])
+    # x_wire[i] = chunk most recently forwarded by node i (to node i+1)
+    x_wire = np.zeros((n, S), dtype=gf.WORD_DTYPE[l])
+    ticks = 0
+    for t in range(num_chunks + n - 1):
+        ticks += 1
+        new_wire = x_wire.copy()
+        for i in range(n):  # all nodes act concurrently within a tick
+            ch = t - i
+            if not (0 <= ch < num_chunks):
+                continue
+            sl = slice(ch * S, (ch + 1) * S)
+            x_in = x_wire[i - 1] if i > 0 else np.zeros(S, dtype=gf.WORD_DTYPE[l])
+            c = x_in.copy()
+            x_out = x_in.copy()
+            for s in range(sched.max_blocks):
+                if not sched.block_valid[i, s]:
+                    continue
+                blk = data[sched.local_blocks[i, s], sl]
+                c ^= gf.gf_mul_np(blk, sched.xi[i, s], l)
+                x_out ^= gf.gf_mul_np(blk, sched.psi[i, s], l)
+            out[i, sl] = c
+            new_wire[i] = x_out
+        x_wire = new_wire
+    return out, ticks
+
+
+def decode_matrix(code: RapidRAIDCode, ids: list[int] | tuple[int, ...]) -> np.ndarray:
+    """(k x len(ids)) matrix D with D @ c[ids] = o. Raises if ids are not decodable."""
+    ids = list(ids)
+    G_sub = code.G[ids].astype(np.int64)
+    if gf.gf_rank_np(G_sub, code.l) < code.k:
+        raise ValueError(f"shard set {ids} is not decodable (rank < k)")
+    # pick k independent rows greedily
+    chosen: list[int] = []
+    for pos in range(len(ids)):
+        trial = chosen + [pos]
+        if gf.gf_rank_np(G_sub[trial], code.l) == len(trial):
+            chosen.append(pos)
+        if len(chosen) == code.k:
+            break
+    inv = gf.gf_inv_matrix_np(G_sub[chosen], code.l)  # (k, k)
+    D = np.zeros((code.k, len(ids)), dtype=gf.WORD_DTYPE[code.l])
+    D[:, chosen] = inv
+    return D
+
+
+def decode(code: RapidRAIDCode, ids, shards: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct the k original blocks from any decodable shard subset."""
+    D = decode_matrix(code, ids)
+    return gf.gf_matmul(D, shards, code.l)
+
+
+def decode_np(code: RapidRAIDCode, ids, shards: np.ndarray) -> np.ndarray:
+    D = decode_matrix(code, ids)
+    return gf.gf_matmul_np(D, shards, code.l)

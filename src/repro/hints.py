@@ -1,0 +1,69 @@
+"""Activation-sharding hint registry (import-cycle-free leaf module).
+
+Model code stays mesh-agnostic: layers call ``hint(x, "act")`` at residual
+boundaries; the launcher installs NamedSharding constraints per mesh via
+``repro.train.sharding.set_activation_hints``. With no hints installed this
+is the identity, so tests and single-device runs are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_HINTS: dict[str, object] = {}
+
+
+def hint(x, site: str):
+    sh = _HINTS.get(site)
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def set_hints(hints: dict[str, object]) -> None:
+    _HINTS.clear()
+    _HINTS.update(hints)
+
+
+def clear_hints() -> None:
+    _HINTS.clear()
+
+
+@contextlib.contextmanager
+def hints_installed(hints: dict[str, object]):
+    old = dict(_HINTS)
+    set_hints(hints)
+    try:
+        yield
+    finally:
+        set_hints(old)
+
+
+# ---------------------------------------------------------------------------
+# scan unrolling (cost-accounting mode)
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE, so flops/bytes/
+# collective numbers from cost_analysis() undercount scanned code by the trip
+# count. The corrected-accounting path (repro.launch.cost_model) lowers a
+# single layer with its *inner* scans (attention tiles, SSM chunks) unrolled
+# — this flag tells those scans to unroll. Default off: the real program
+# keeps compact while-loops.
+# ---------------------------------------------------------------------------
+
+_UNROLL_SCANS = False
+
+
+def scan_unroll() -> bool:
+    return _UNROLL_SCANS
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    global _UNROLL_SCANS
+    old = _UNROLL_SCANS
+    _UNROLL_SCANS = True
+    try:
+        yield
+    finally:
+        _UNROLL_SCANS = old

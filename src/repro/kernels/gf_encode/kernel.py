@@ -1,0 +1,182 @@
+"""Pallas TPU kernels for GF(2^l) erasure encoding.
+
+Three kernels, all operating on VMEM tiles with explicit BlockSpecs:
+
+* ``gf_encode_kernel``   — static-coefficient matrix encode on the VPU using
+  packed bit-plane arithmetic (4 bytes / 2 halfwords per 32-bit lane; zero
+  gathers). The masks ``(x_j >> b) & lsb`` are hoisted and reused across all
+  output rows, so the op count is k*l masks + rows*k*l mul/xor per tile.
+* ``chain_step_kernel``  — the fused per-node RapidRAID step (Eqs. 3-4):
+  consumes the incoming wire chunk, produces BOTH the local codeword chunk
+  (xi path) and the forwarded wire (psi path) in one pass over the data —
+  the paper's "both phases executed simultaneously" observation (§IV-A).
+  Coefficients arrive as a (max_b, l) uint32 plane array (traced, per node).
+* ``gf_encode_mxu_kernel`` — beyond-paper variant: lift GF(2^8) to F_2 bit
+  matrices; encoding becomes an int8 matmul mod 2 that runs on the MXU
+  (the systolic array) instead of the VPU. Trades 64x nominal MACs for the
+  MXU's much higher int8 throughput; see EXPERIMENTS.md §Perf for the
+  roofline comparison.
+
+On CPU (this container) the kernels run under ``interpret=True``; the
+BlockSpecs below are the real TPU tiling (last dim a multiple of 128 lanes,
+working set sized for ~16 MB VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import gf
+
+DEFAULT_BLOCK = 512  # uint32 lanes per tile: 2 KiB/row — k=16 rows fit easily
+
+
+def _encode_body(x_ref, o_ref, *, M: np.ndarray, l: int):
+    rows, k = M.shape
+    lsb = jnp.uint32(gf.LSB_MASK[l])
+    x = x_ref[...]  # (k, TB) uint32
+    acc = [jnp.zeros_like(x[0]) for _ in range(rows)]
+    # hoist bit masks: one (x_j >> b) & lsb per (input row, bit-plane)
+    for j in range(k):
+        consts = [gf.bitplane_consts(int(M[r, j]), l) for r in range(rows)]
+        for b in range(l):
+            if not any(consts[r][b] for r in range(rows)):
+                continue
+            m = (x[j] >> b) & lsb
+            for r in range(rows):
+                cst = consts[r][b]
+                if cst:
+                    acc[r] = acc[r] ^ (m * jnp.uint32(cst))
+    o_ref[...] = jnp.stack(acc)
+
+
+def gf_encode_kernel(M: np.ndarray, data_packed: jax.Array, l: int,
+                     block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Static-coeff encode: (k, Bp) packed -> (rows, Bp) packed, grid over Bp."""
+    M = np.asarray(M)
+    rows, k = M.shape
+    kk, Bp = data_packed.shape
+    assert kk == k and Bp % block == 0, (data_packed.shape, M.shape, block)
+    return pl.pallas_call(
+        functools.partial(_encode_body, M=M, l=l),
+        grid=(Bp // block,),
+        in_specs=[pl.BlockSpec((k, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((rows, Bp), jnp.uint32),
+        interpret=interpret,
+    )(data_packed)
+
+
+def _chain_step_body(x_ref, local_ref, bpsi_ref, bxi_ref, c_ref, xout_ref,
+                     *, l: int, max_b: int):
+    lsb = jnp.uint32(gf.LSB_MASK[l])
+    x_in = x_ref[...]          # (1, TB)
+    c = x_in
+    xo = x_in
+    for s in range(max_b):
+        blk = local_ref[s, :][None]  # (1, TB)
+        for b in range(l):
+            m = (blk >> b) & lsb     # shared between psi and xi paths
+            c = c ^ (m * bxi_ref[s, b])
+            xo = xo ^ (m * bpsi_ref[s, b])
+    c_ref[...] = c
+    xout_ref[...] = xo
+
+
+def chain_step_kernel(x_in: jax.Array, local: jax.Array, bp_psi: jax.Array,
+                      bp_xi: jax.Array, l: int, block: int = DEFAULT_BLOCK,
+                      interpret: bool = True):
+    """Fused RapidRAID node step on one chunk.
+
+    x_in (1, C) uint32 wire; local (max_b, C) packed replica blocks;
+    bp_psi/bp_xi (max_b, l) uint32 bit-plane coefficient constants.
+    Returns (c, x_out), each (1, C).
+    """
+    max_b, C = local.shape
+    assert x_in.shape == (1, C) and C % block == 0
+    body = functools.partial(_chain_step_body, l=l, max_b=max_b)
+    return pl.pallas_call(
+        body,
+        grid=(C // block,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((max_b, block), lambda i: (0, i)),
+            pl.BlockSpec((max_b, l), lambda i: (0, 0)),  # coeff planes: whole
+            pl.BlockSpec((max_b, l), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, C), jnp.uint32),
+            jax.ShapeDtypeStruct((1, C), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x_in, local, bp_psi, bp_xi)
+
+
+# ---------------------------------------------------------------------------
+# MXU bit-lift variant (beyond paper)
+# ---------------------------------------------------------------------------
+
+def bitlift_matrix(M: np.ndarray, l: int) -> np.ndarray:
+    """Lift (rows,k) GF(2^l) coeffs to an (rows*l, k*l) F2 matrix (int8).
+
+    bit_i(c*x) = xor_b bit_b(x) * bit_i(c * alpha^b), so
+    Mbits[r*l + i, j*l + b] = bit_i(M[r,j] * alpha^b).
+    """
+    rows, k = M.shape
+    out = np.zeros((rows * l, k * l), dtype=np.int8)
+    for r in range(rows):
+        for j in range(k):
+            c = int(M[r, j])
+            if not c:
+                continue
+            for b in range(l):
+                prod = gf.gf_mul_scalar(c, 1 << b, l)
+                for i in range(l):
+                    out[r * l + i, j * l + b] = (prod >> i) & 1
+    return out
+
+
+def _mxu_body(x_ref, mb_ref, o_ref, *, l: int, rows: int, k: int):
+    x = x_ref[...]  # (k, TB) words as int32 (uint8/16 widened on host)
+    # unpack to bit planes: col order j*l + b  ->  (k*l, TB) int8
+    bits = jnp.stack([(x >> b) & 1 for b in range(l)], axis=1)  # (k, l, TB)
+    bits = bits.reshape(k * l, -1).astype(jnp.int8)
+    Mb = mb_ref[...]  # (rows*l, k*l) int8 bit-lifted generator
+    y = jax.lax.dot_general(Mb, bits, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+    y = y & 1                                            # mod-2: xor via MXU
+    y = y.reshape(rows, l, -1)
+    word = jnp.zeros_like(y[:, 0])
+    for i in range(l):
+        word = word | (y[:, i] << i)
+    o_ref[...] = word
+
+
+def gf_encode_mxu_kernel(M: np.ndarray, data_words: jax.Array, l: int,
+                         block: int = 1024, interpret: bool = True):
+    """Bit-lifted MXU encode: (k, B) words (int32) -> (rows, B) words (int32)."""
+    M = np.asarray(M)
+    rows, k = M.shape
+    Mbits = bitlift_matrix(M, l)
+    kk, B = data_words.shape
+    assert kk == k and B % block == 0
+    body = functools.partial(_mxu_body, l=l, rows=rows, k=k)
+    return pl.pallas_call(
+        body,
+        grid=(B // block,),
+        in_specs=[
+            pl.BlockSpec((k, block), lambda i: (0, i)),
+            pl.BlockSpec((rows * l, k * l), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((rows, B), jnp.int32),
+        interpret=interpret,
+    )(data_words, jnp.asarray(Mbits))

@@ -1,0 +1,73 @@
+"""Jit'd public wrappers around the GF encode kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel bodies then execute exactly as written, validating logic + tiling),
+and to False on a real TPU backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf
+from repro.kernels.gf_encode import kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("M_key", "l", "block", "interpret"))
+def _encode_packed_jit(data_packed, M_key, l, block, interpret):
+    M = np.asarray(M_key)
+    return kernel.gf_encode_kernel(M, data_packed, l, block=block,
+                                   interpret=interpret)
+
+
+def encode_packed(M: np.ndarray, data_packed: jax.Array, l: int,
+                  block: int = kernel.DEFAULT_BLOCK,
+                  interpret: bool | None = None) -> jax.Array:
+    """Packed bit-plane VPU encode. (k, Bp) uint32 -> (rows, Bp) uint32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    M_key = tuple(tuple(int(v) for v in row) for row in np.asarray(M))
+    return _encode_packed_jit(data_packed, M_key, l, block, interpret)
+
+
+def encode_words(M: np.ndarray, data: jax.Array, l: int,
+                 block: int = kernel.DEFAULT_BLOCK,
+                 interpret: bool | None = None) -> jax.Array:
+    """Word-level convenience wrapper: packs, encodes, unpacks."""
+    dp = gf.pack_u32(data, l)
+    out = encode_packed(M, dp, l, block=block, interpret=interpret)
+    return gf.unpack_u32(out, l)
+
+
+@functools.partial(jax.jit, static_argnames=("M_key", "l", "block", "interpret"))
+def _encode_mxu_jit(data_words, M_key, l, block, interpret):
+    M = np.asarray(M_key)
+    return kernel.gf_encode_mxu_kernel(M, data_words, l, block=block,
+                                       interpret=interpret)
+
+
+def encode_mxu(M: np.ndarray, data: jax.Array, l: int, block: int = 1024,
+               interpret: bool | None = None) -> jax.Array:
+    """Bit-lifted MXU encode. (k, B) words -> (rows, B) words."""
+    if interpret is None:
+        interpret = _interpret_default()
+    M_key = tuple(tuple(int(v) for v in row) for row in np.asarray(M))
+    out = _encode_mxu_jit(data.astype(jnp.int32), M_key, l, block, interpret)
+    return out.astype(gf.WORD_DTYPE[l])
+
+
+def chain_step(x_in: jax.Array, local: jax.Array, bp_psi: jax.Array,
+               bp_xi: jax.Array, l: int, block: int = kernel.DEFAULT_BLOCK,
+               interpret: bool | None = None):
+    """Fused per-node RapidRAID chunk step (traced coefficients)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return kernel.chain_step_kernel(x_in, local, bp_psi, bp_xi, l,
+                                    block=block, interpret=interpret)

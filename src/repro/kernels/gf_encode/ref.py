@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the GF encode kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf
+
+
+def encode_packed_ref(M: np.ndarray, data_packed: jax.Array, l: int) -> jax.Array:
+    """(rows,k) static coeffs x (k, Bp) packed uint32 -> (rows, Bp) packed."""
+    return gf.gf_matvec_packed(M, data_packed, l)
+
+
+def encode_words_ref(M: np.ndarray, data: jax.Array, l: int) -> jax.Array:
+    """(rows,k) x (k, B) words -> (rows, B) words (table arithmetic)."""
+    return gf.gf_matmul(jnp.asarray(M), data, l)
+
+
+def bitlift_encode_ref(M: np.ndarray, data: jax.Array, l: int) -> jax.Array:
+    """jnp oracle of the MXU bit-lift encode: (rows,k) x (k,B) -> (rows,B).
+
+    Lifts coefficients to an F2 matrix and runs an int8 matmul mod 2 —
+    exactly what kernels.gf_encode.gf_encode_mxu_kernel does on the MXU.
+    """
+    from repro.kernels.gf_encode import kernel as k_lib
+    rows, k = np.asarray(M).shape
+    Mbits = jnp.asarray(k_lib.bitlift_matrix(M, l))        # (rows*l, k*l)
+    x = data.astype(jnp.int32)
+    bits = jnp.stack([(x >> b) & 1 for b in range(l)], axis=1)
+    bits = bits.reshape(k * l, -1).astype(jnp.int8)
+    y = jax.lax.dot_general(Mbits, bits, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.int32) & 1
+    y = y.reshape(rows, l, -1)
+    word = jnp.zeros_like(y[:, 0])
+    for i in range(l):
+        word = word | (y[:, i] << i)
+    return word.astype(gf.WORD_DTYPE[l])
+
+
+def chain_step_ref(x_in: jax.Array, local: jax.Array, psi: np.ndarray,
+                   xi: np.ndarray, l: int) -> tuple[jax.Array, jax.Array]:
+    """One storage-node chunk step (Eqs. 3-4), packed uint32.
+
+    x_in (1, C); local (max_b, C); psi/xi (max_b,) GF words.
+    Returns (c, x_out), each (1, C).
+    """
+    c = x_in
+    xo = x_in
+    for s in range(local.shape[0]):
+        c = c ^ gf.gf_mul_const_packed(local[s][None], int(xi[s]), l)
+        xo = xo ^ gf.gf_mul_const_packed(local[s][None], int(psi[s]), l)
+    return c, xo

@@ -1,0 +1,96 @@
+"""Collective-traffic accounting from compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but no collective
+bytes, so we parse the optimized HLO: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction, its output
+shape, and its replica group size. Bytes are converted to *per-device link
+bytes* with the standard ring-algorithm factors:
+
+  all-reduce       2 (g-1)/g * |out|      (reduce-scatter + all-gather)
+  all-gather         (g-1)/g * |out|
+  reduce-scatter     (g-1)   * |out|      (operand = g * |out|)
+  all-to-all         (g-1)/g * |out|
+  collective-permute          |out|
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %x = f32[16,128]{1,0} all-gather(%y), channel_id=3, replica_groups=[4,2]<=[8]
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: dict[str, float]          # op kind -> per-device link bytes
+    count: dict[str, int]
+    total_bytes: float
+
+    def summary(self) -> dict:
+        return {"per_op_bytes": self.per_op, "per_op_count": self.count,
+                "total_bytes": self.total_bytes}
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    per_op: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        op = op.replace("-start", "")
+        out_bytes = _shape_bytes(dtype, dims)
+        g = _group_size(line)
+        if op == "collective-permute":
+            if not _SRC_TGT_RE.search(line):
+                g = 2  # fallback
+            link = out_bytes
+        elif op == "all-reduce":
+            link = 2 * (g - 1) / max(g, 1) * out_bytes
+        elif op == "all-gather":
+            link = (g - 1) / max(g, 1) * out_bytes
+        elif op == "reduce-scatter":
+            link = (g - 1) * out_bytes
+        elif op == "all-to-all":
+            link = (g - 1) / max(g, 1) * out_bytes
+        else:
+            link = out_bytes
+        per_op[op] = per_op.get(op, 0.0) + link
+        count[op] = count.get(op, 0) + 1
+    return CollectiveStats(per_op=per_op, count=count,
+                           total_bytes=sum(per_op.values()))

@@ -1,0 +1,8 @@
+# 10 assigned architectures on a shared functional substrate.
+#   layers.py       norms, RoPE/M-RoPE, GQA(+qk_norm, windows), MLA, SwiGLU
+#   ssm.py          Mamba2-style SSD heads (Hymba) + RWKV6 chunked wkv
+#   moe.py          top-k router + GShard dispatch/combine einsums
+#   transformer.py  scanned decoder stack (dense/moe/ssm/hybrid)
+#   encdec.py       whisper-style encoder-decoder (frontend stubbed)
+#   model.py        ModelConfig + init/forward/loss/prefill/decode API
+from repro.models import model  # noqa: F401

@@ -1,0 +1,242 @@
+"""Top-level model API: config dataclass, init, forward, loss, decode.
+
+Everything is a pure function over (config, params pytree) — usable under
+``jax.jit``, ``jax.eval_shape`` (the dry-run never materializes weights), and
+``lax.scan``. One config type covers all 10 assigned architectures; the
+``family`` field selects the layer wiring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.hints import hint
+from repro.models import encdec, transformer
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # attention extras
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    mrope_sections: tuple[int, int, int] | None = None
+    sliding_window: int | None = None
+    global_layers: tuple[int, ...] = ()
+    # MLA (MiniCPM3 / DeepSeek)
+    mla: bool = False
+    mla_q_lora: int = 768
+    mla_kv_lora: int = 256
+    mla_qk_nope_dim: int = 64
+    mla_qk_rope_dim: int = 32
+    mla_v_dim: int = 64
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 2
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    moe_seq_chunk: int = 0     # dispatch window (0 = whole sequence)
+    # SSM (Hymba mamba branch / RWKV6 chunking)
+    ssm_state: int = 16
+    ssm_d_inner: int = 0
+    ssm_heads: int = 0
+    ssm_chunk: int = 128
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_ctx: int = 1500
+    # numerics / scheduling
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    remat: bool = True
+    z_loss: float = 1e-4
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def param_count(self) -> int:
+        """Total parameters (counted from shapes, no allocation)."""
+        shapes = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), self))
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Per-token active parameters (MoE: top_k of n_experts)."""
+        total = self.param_count()
+        if self.family != "moe":
+            return total
+        shapes = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), self))
+        moe_leaves = jax.tree.leaves(shapes["layers"]["moe"]
+                                     if "moe" in shapes.get("layers", {}) else {})
+        moe_total = sum(int(np.prod(x.shape)) for x in moe_leaves)
+        expert_part = moe_total  # router negligible
+        return total - expert_part + expert_part * self.moe_top_k // self.n_experts
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    p: Params = {
+        "embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model, dt),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "lm_head": L.dense_init(ks[1], cfg.d_model, cfg.vocab, dt),
+    }
+    if cfg.family == "encdec":
+        p.update(encdec.encdec_init(ks[2], cfg, dt))
+    else:
+        p["layers"] = transformer.stack_init(ks[2], cfg, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def cast_params(params: Params, cfg: ModelConfig) -> Params:
+    """Cast floating-point weights to the compute dtype (bf16 matmuls).
+
+    1-D leaves (norm scales, per-head gains, A_log/dt biases) stay in their
+    stored dtype — they are tiny and several are numerically sensitive.
+    """
+    def cast(a):
+        if jnp.issubdtype(a.dtype, jnp.floating) and a.ndim >= 2:
+            return a.astype(cfg.cdtype)
+        return a
+
+    return jax.tree.map(cast, params)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            mrope_pos: jax.Array | None = None,
+            enc_frames: jax.Array | None = None):
+    """tokens (B,S) -> (logits (B,S,V) fp32, aux loss scalar)."""
+    params = cast_params(params, cfg)
+    x = hint(jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype),
+             "act")
+    if cfg.family == "encdec":
+        assert enc_frames is not None, "encdec family needs encoder frames"
+        enc_out = encdec.encode_audio(params, cfg, enc_frames.astype(cfg.cdtype))
+        x = encdec.run_decoder(params, cfg, x, enc_out)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        x, aux = transformer.run_stack(params["layers"], cfg, x,
+                                       mrope_pos=mrope_pos)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = (x @ params["lm_head"].astype(cfg.cdtype)).astype(jnp.float32)
+    return hint(logits, "logits"), aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]):
+    """Next-token cross entropy (+ z-loss + MoE aux). Labels = -1 are masked."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          mrope_pos=batch.get("mrope_pos"),
+                          enc_frames=batch.get("enc_frames"))
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (lse - picked) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll) / denom
+    zl = cfg.z_loss * jnp.sum(jnp.square(lse) * mask) / denom
+    total = ce + zl + cfg.aux_loss_weight * aux
+    return total, {"loss": total, "ce": ce, "z_loss": zl, "aux": aux,
+                   "tokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> Params:
+    dt = cfg.cdtype
+    if cfg.family == "encdec":
+        return encdec.dec_cache_init(cfg, batch, seq, dt)
+    return transformer.stack_cache_init(cfg, batch, seq, dt)
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            mrope_pos: jax.Array | None = None,
+            enc_frames: jax.Array | None = None):
+    """Process a prompt: returns (last-position logits (B,V), decode cache).
+
+    The returned cache covers seq positions [0, S); use ``extend_cache`` to
+    grow it to the serving horizon before calling ``decode_step``.
+    """
+    params = cast_params(params, cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    if cfg.family == "encdec":
+        assert enc_frames is not None
+        enc_out = encdec.encode_audio(params, cfg, enc_frames.astype(cfg.cdtype))
+        x, caches = encdec.run_decoder_prefill(params, cfg, x, enc_out)
+    else:
+        x, caches = transformer.run_stack_prefill(params["layers"], cfg, x,
+                                                  mrope_pos=mrope_pos)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = (x[:, -1] @ params["lm_head"].astype(cfg.cdtype)).astype(jnp.float32)
+    return hint(logits, "logits2d"), caches
+
+
+_PAD_SEQ_KEYS = {"k", "v", "c", "k_rope"}
+
+
+def extend_cache(cache: Params, target_seq: int) -> Params:
+    """Pad the seq axis of KV-bearing cache leaves up to ``target_seq``."""
+    def walk(d):
+        out = {}
+        for key, val in d.items():
+            if isinstance(val, dict):
+                out[key] = walk(val)
+            elif key in _PAD_SEQ_KEYS and val.ndim >= 3:
+                pad = target_seq - val.shape[2]
+                assert pad >= 0, (key, val.shape, target_seq)
+                widths = [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (val.ndim - 3)
+                out[key] = jnp.pad(val, widths)
+            else:
+                out[key] = val
+        return out
+
+    return walk(cache)
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                token: jax.Array, pos: jax.Array):
+    """One serve step: token (B,1) + cache -> (logits (B,V) fp32, new cache)."""
+    params = cast_params(params, cfg)
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.cdtype)
+    if cfg.family == "encdec":
+        x, cache = encdec.run_decoder_decode(params, cfg, x, cache, pos)
+    else:
+        x, cache = transformer.run_stack_decode(params["layers"], cfg, x,
+                                                cache, pos)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = (x[:, 0] @ params["lm_head"].astype(cfg.cdtype)).astype(jnp.float32)
+    return hint(logits, "logits2d"), cache

@@ -1,0 +1,340 @@
+"""State-space sequence mixers: Mamba2-style SSD heads (Hymba) and RWKV6.
+
+Both recurrences are *linear* in the state, so instead of a token-level
+``lax.scan`` (whose backward pass would store one state per token — tens of
+GB at 32k context) we use the chunked formulation: scan over chunks of
+``chunk`` tokens carrying only the inter-chunk state, with the intra-chunk
+part computed as dense (chunk x chunk) einsums. This is the standard
+TPU/GPU-friendly reformulation (SSD / GLA style) — O(S·C) memory, matmul
+shaped for the MXU — and is recorded in DESIGN.md as a hardware adaptation.
+
+All decays are handled in log space; within-chunk exponents are always <= 0
+(decays are in (0,1)), so the fp32 intra-chunk tiles never overflow.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.layers import _scan, dense_init, rmsnorm, rmsnorm_init
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2-style SSD heads (used as Hymba's parallel SSM branch)
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg, dtype) -> Params:
+    ks = jax.random.split(key, 7)
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    ns = cfg.ssm_state
+    return {
+        "win": dense_init(ks[0], d, 2 * di, dtype),         # x and gate z
+        "wbc": dense_init(ks[1], d, 2 * ns, dtype),         # B_t, C_t (shared)
+        "wdt": dense_init(ks[2], d, H, dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),              # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "conv": (jax.random.normal(ks[3], (4, di), jnp.float32) * 0.1).astype(dtype),
+        "norm": rmsnorm_init(di, dtype),
+        "wout": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width w.shape[0]; x (B,S,di)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pad[:, i: i + x.shape[1]] * w[i]
+    return out
+
+
+def _ssd_chunk_scan(xdt, a_log, Bm, Cm, chunk: int):
+    """Chunked SSD. xdt (B,S,H,dh) = dt*x; a_log (B,S,H) per-step log decay;
+    Bm/Cm (B,S,ns). Returns y (B,S,H,dh)."""
+    B, S, H, dh = xdt.shape
+    ns = Bm.shape[-1]
+    C = min(chunk, S)
+    Sp = -(-S // C) * C
+    if Sp != S:  # pad: zero inputs + zero log-decay leave the state untouched
+        pad = ((0, 0), (0, Sp - S))
+        xdt = jnp.pad(xdt, pad + ((0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, pad + ((0, 0),))
+        Bm = jnp.pad(Bm, pad + ((0, 0),))
+        Cm = jnp.pad(Cm, pad + ((0, 0),))
+    S_orig, S = S, Sp
+    nchunks = S // C
+    xdt = xdt.reshape(B, nchunks, C, H, dh)
+    a_log = a_log.reshape(B, nchunks, C, H)
+    Bm = Bm.reshape(B, nchunks, C, ns)
+    Cm = Cm.reshape(B, nchunks, C, ns)
+    mask = jnp.tril(jnp.ones((C, C), bool))
+
+    def step(state, inp):
+        x_c, al_c, b_c, c_c = inp                 # (B,C,H,dh),(B,C,H),(B,C,ns)
+        L = jnp.cumsum(al_c, axis=1)              # (B,C,H) log cumulative decay
+        # inter-chunk: y_t += (C_t . state) * exp(L_t)
+        y_inter = jnp.einsum("bcn,bhdn->bchd", c_c, state) * \
+            jnp.exp(L)[..., None]
+        # intra-chunk: G[t,s] = (C_t.B_s) exp(L_t - L_s) for s <= t
+        diff = L[:, :, None, :] - L[:, None, :, :]            # (B,C,C,H)
+        diff = jnp.where(mask[None, :, :, None], diff, -jnp.inf)
+        G = jnp.einsum("btn,bsn->bts", c_c, b_c)[..., None] * jnp.exp(diff)
+        y_intra = jnp.einsum("btsh,bshd->bthd", G, x_c)
+        # state update: S' = exp(L_C) S + sum_s exp(L_C - L_s) x_s B_s^T
+        decay_tail = jnp.exp(L[:, -1:, :] - L)                 # (B,C,H)
+        state = state * jnp.exp(L[:, -1])[:, :, None, None] + \
+            jnp.einsum("bch,bchd,bcn->bhdn", decay_tail, x_c, b_c)
+        return state, y_inter + y_intra
+
+    state0 = jnp.zeros((B, H, dh, ns), jnp.float32)
+    xs = (jnp.swapaxes(xdt, 0, 1), jnp.swapaxes(a_log, 0, 1),
+          jnp.swapaxes(Bm, 0, 1), jnp.swapaxes(Cm, 0, 1))
+    final, ys = _scan(step, state0, xs)
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, S, H, dh)
+    return y[:, :S_orig], final
+
+
+def _mamba_proj(p: Params, cfg, x: jax.Array):
+    """Shared projections for prefill and decode paths."""
+    di, H = cfg.ssm_d_inner, cfg.ssm_heads
+    xz = x @ p["win"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    bc = x @ p["wbc"]
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+    dt = jax.nn.softplus(x @ p["wdt"] + p["dt_bias"]).astype(jnp.float32)
+    a_log = (-jnp.exp(p["A_log"]))[None, None] * dt        # (B,S,H) log decay
+    return xin, z, Bm, Cm, dt, a_log
+
+
+def mamba_forward(p: Params, cfg, x: jax.Array, return_state: bool = False):
+    """x (B,S,D) -> (B,S,D). SSD heads with depthwise conv + gated output."""
+    B, S, _ = x.shape
+    di, H = cfg.ssm_d_inner, cfg.ssm_heads
+    dh = di // H
+    xin_raw, z, Bm, Cm, dt, a_log = _mamba_proj(p, cfg, x)
+    xin = jax.nn.silu(_causal_conv(xin_raw, p["conv"]))
+    xh = xin.reshape(B, S, H, dh).astype(jnp.float32)
+    y, final = _ssd_chunk_scan(xh * dt[..., None], a_log, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    out = y @ p["wout"]
+    if return_state:
+        conv_buf = jnp.pad(xin_raw, ((0, 0), (3, 0), (0, 0)))[:, S: S + 3]
+        return out, {"state": final, "conv": conv_buf}
+    return out
+
+
+def mamba_decode(p: Params, cfg, x: jax.Array, cache: Params):
+    """Single token step. cache: {"state": (B,H,dh,ns) f32, "conv": (B,3,di)}."""
+    B = x.shape[0]
+    di, H = cfg.ssm_d_inner, cfg.ssm_heads
+    dh = di // H
+    xin_raw, z, Bm, Cm, dt, a_log = _mamba_proj(p, cfg, x)
+    # conv over (3 cached + current) tokens
+    win = jnp.concatenate([cache["conv"], xin_raw], axis=1)  # (B,4,di)
+    conv_out = jnp.einsum("bwd,wd->bd", win, p["conv"])[:, None]
+    xin = jax.nn.silu(conv_out)
+    xh = xin.reshape(B, 1, H, dh).astype(jnp.float32)        # un-scaled input
+    xdt = xh * dt[..., None]
+    a = jnp.exp(a_log[:, 0])                                 # (B,H)
+    state = cache["state"] * a[:, :, None, None] + \
+        jnp.einsum("bhd,bn->bhdn", xdt[:, 0], Bm[:, 0])
+    y = jnp.einsum("bn,bhdn->bhd", Cm[:, 0], state)
+    y = y + xh[:, 0] * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    new_cache = {"state": state, "conv": win[:, 1:]}
+    return y @ p["wout"], new_cache
+
+
+def mamba_cache_init(cfg, batch: int, dtype) -> Params:
+    di, H = cfg.ssm_d_inner, cfg.ssm_heads
+    return {
+        "state": jnp.zeros((batch, H, di // H, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch"): data-dependent token-shift lerp + per-channel decay wkv
+# ---------------------------------------------------------------------------
+
+MIX_LORA = 32
+DECAY_LORA = 64
+N_MIX = 5  # (r, k, v, w, g)
+
+
+def rwkv_time_init(key, cfg, dtype) -> Params:
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    return {
+        "mu": (jax.random.uniform(ks[0], (N_MIX, d), jnp.float32)).astype(dtype),
+        "maa_w1": dense_init(ks[1], d, N_MIX * MIX_LORA, dtype),
+        "maa_w2": (jax.random.normal(ks[2], (N_MIX, MIX_LORA, d), jnp.float32)
+                   * 0.01).astype(dtype),
+        "wr": dense_init(ks[3], d, d, dtype),
+        "wk": dense_init(ks[4], d, d, dtype),
+        "wv": dense_init(ks[5], d, d, dtype),
+        "wg": dense_init(ks[6], d, d, dtype),
+        "w0": jnp.full((d,), -1.0, jnp.float32),       # resting log-log decay
+        "decay_w1": dense_init(ks[7], d, DECAY_LORA, dtype),
+        "decay_w2": (jax.random.normal(ks[8], (DECAY_LORA, d), jnp.float32)
+                     * 0.01).astype(dtype),
+        "u": jnp.zeros((H, dh), jnp.float32),          # per-head bonus
+        "ln_out": rmsnorm_init(d, dtype),
+        "wo": dense_init(ks[9], d, d, dtype),
+    }
+
+
+def _rwkv_mix(p: Params, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent lerp between x and the shifted x (5 targets)."""
+    dxprev = x_prev - x
+    base = x + dxprev * p["mu"][0]  # first mix feeds the lora that mixes the rest
+    mixed = jnp.tanh(base @ p["maa_w1"])
+    mixed = mixed.reshape(x.shape[:-1] + (N_MIX, MIX_LORA))
+    delta = jnp.einsum("...nl,nld->...nd", mixed, p["maa_w2"])
+    mus = p["mu"][None, None] + delta                  # (B,S,5,D)
+    xs = x[..., None, :] + dxprev[..., None, :] * mus
+    return [xs[..., i, :] for i in range(N_MIX)]
+
+
+def _rwkv_rkvwg(p: Params, cfg, x: jax.Array, x_prev: jax.Array):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    xr, xk, xv, xw, xg = _rwkv_mix(p, x, x_prev)
+    r = (xr @ p["wr"]).reshape(B, S, H, dh)
+    k = (xk @ p["wk"]).reshape(B, S, H, dh)
+    v = (xv @ p["wv"]).reshape(B, S, H, dh)
+    g = jax.nn.silu(xg @ p["wg"])
+    dec = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    logw = -jnp.exp(jnp.clip(p["w0"] + dec.astype(jnp.float32), -8.0, 2.0))
+    logw = logw.reshape(B, S, H, dh)                   # per-channel log decay <0
+    return r, k, v, g, logw
+
+
+def _wkv_chunk_scan(r, k, v, logw, u, chunk: int):
+    """Chunked WKV6: state S (dk,dv) with per-(head,channel) decay.
+
+    r/k/v (B,S,H,dh); logw (B,S,H,dh) (decay applied *after* the bonus read).
+    y_t = r_t . (S_{t-1} + (u*k_t) v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    B, S, H, dh = r.shape
+    C = min(chunk, S)
+    Sp = -(-S // C) * C
+    if Sp != S:  # zero r/k/v + zero log-decay: padding is a no-op on state
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+        logw = jnp.pad(logw, pad)
+    S_orig, S = S, Sp
+    n = S // C
+    rs = r.astype(jnp.float32).reshape(B, n, C, H, dh)
+    ks_ = k.astype(jnp.float32).reshape(B, n, C, H, dh)
+    vs = v.astype(jnp.float32).reshape(B, n, C, H, dh)
+    lw = logw.reshape(B, n, C, H, dh)
+    mask_strict = jnp.tril(jnp.ones((C, C), bool), k=-1)
+
+    def step(state, inp):
+        r_c, k_c, v_c, w_c = inp                       # (B,C,H,dh)
+        # decay BEFORE position t (exclusive cumsum: state seen by token t)
+        Lx = jnp.cumsum(w_c, axis=1) - w_c             # (B,C,H,dh), <= 0
+        y_inter = jnp.einsum("bchd,bhde->bche", r_c * jnp.exp(Lx), state)
+        # intra: token t reads s<t scaled by exp(Lx_t - L_s) where
+        # L_s = inclusive cumsum at s (decay applied after s's write)
+        Li = Lx + w_c
+        diff = Lx[:, :, None] - Li[:, None, :]         # (B,C,C,H,dh)
+        diff = jnp.where(mask_strict[None, :, :, None, None], diff, -jnp.inf)
+        A = jnp.einsum("bthd,btshd,bshd->btsh", r_c, jnp.exp(diff), k_c)
+        y_intra = jnp.einsum("btsh,bshe->bthe", A, v_c)
+        # bonus: current token with u instead of decay
+        bonus = jnp.einsum("bchd,bchd->bch", r_c, u[None, None] * k_c)
+        y_bonus = bonus[..., None] * v_c
+        # state update over the whole chunk
+        decay_tail = jnp.exp(Li[:, -1:] - Li)          # (B,C,H,dh)
+        state = state * jnp.exp(Li[:, -1])[..., None] + \
+            jnp.einsum("bchd,bche->bhde", k_c * decay_tail, v_c)
+        return state, y_inter + y_intra + y_bonus
+
+    state0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    xs = tuple(jnp.swapaxes(a, 0, 1) for a in (rs, ks_, vs, lw))
+    final, ys = _scan(step, state0, xs)
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, S, H, dh)
+    return y[:, :S_orig], final
+
+
+def rwkv_time_forward(p: Params, cfg, x: jax.Array, return_state: bool = False):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _rwkv_rkvwg(p, cfg, x, x_prev)
+    y, final = _wkv_chunk_scan(r, k, v, logw, p["u"], cfg.ssm_chunk)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(p["ln_out"], y) * g
+    out = y @ p["wo"]
+    if return_state:
+        return out, {"state": final, "x_prev": x[:, -1:]}
+    return out
+
+
+def rwkv_time_decode(p: Params, cfg, x: jax.Array, cache: Params):
+    """cache: {"state": (B,H,dh,dh) f32, "x_prev": (B,1,D)}."""
+    B, _, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    r, k, v, g, logw = _rwkv_rkvwg(p, cfg, x, cache["x_prev"])
+    r1, k1, v1 = r[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32), \
+        v[:, 0].astype(jnp.float32)
+    state = cache["state"]
+    y = jnp.einsum("bhd,bhde->bhe", r1, state) + \
+        jnp.einsum("bhd,bhd,bhe->bhe", r1, p["u"][None] * k1, v1)
+    state = state * jnp.exp(logw[:, 0])[..., None] + \
+        jnp.einsum("bhd,bhe->bhde", k1, v1)
+    y = y.reshape(B, 1, d).astype(x.dtype)
+    y = rmsnorm(p["ln_out"], y) * g
+    return y @ p["wo"], {"state": state, "x_prev": x}
+
+
+def rwkv_channel_init(key, cfg, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (d,), jnp.float32)).astype(dtype),
+        "mu_r": (jax.random.uniform(ks[1], (d,), jnp.float32)).astype(dtype),
+        "wk": dense_init(ks[0], d, f, dtype),
+        "wv": dense_init(ks[1], f, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def rwkv_channel_forward(p: Params, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+
+
+def rwkv_cache_init(cfg, batch: int, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    return {
+        "time": {"state": jnp.zeros((batch, H, dh, dh), jnp.float32),
+                 "x_prev": jnp.zeros((batch, 1, d), dtype)},
+        "chan_x_prev": jnp.zeros((batch, 1, d), dtype),
+    }

@@ -1,0 +1,303 @@
+"""Unified decoder-only LM stack covering dense / MoE / SSM / hybrid families.
+
+Layers are stacked along a leading L axis and driven by ``lax.scan`` so the
+HLO stays O(1) in depth (62-80 layer configs compile fast and the dry-run
+cost analysis stays readable). Per-layer structural variation (sliding-window
+vs global attention in Hymba) is data: a scanned boolean picks the mask.
+
+Families:
+  dense  — [norm -> attn -> +] [norm -> swiglu -> +]
+  moe    — [norm -> attn -> +] [norm -> top-k MoE -> +]  (aux loss carried)
+  hybrid — [norm -> (attn || mamba) mean -> +] [norm -> swiglu -> +]  (Hymba)
+  ssm    — [norm -> rwkv6 time mix -> +] [norm -> rwkv6 channel mix -> +]
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.hints import hint
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+
+def layer_init(key, cfg, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": L.rmsnorm_init(cfg.d_model, dtype),
+                 "norm2": L.rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.family == "ssm":
+        p["time"] = ssm_lib.rwkv_time_init(ks[0], cfg, dtype)
+        p["chan"] = ssm_lib.rwkv_channel_init(ks[1], cfg, dtype)
+        return p
+    if cfg.mla:
+        p["attn"] = L.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = L.gqa_init(ks[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["mamba"] = ssm_lib.mamba_init(ks[1], cfg, dtype)
+        p["attn_out_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+        p["mamba_out_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.moe_init(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def stack_init(key, cfg, dtype) -> Params:
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.vmap(lambda k: layer_init(k, cfg, dtype))(keys)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _window_of(cfg, use_window, S: int):
+    """Resolve the attention window. A STATIC bool (segment-scanned stacks)
+    yields a static int window -> the banded fast path in layers.py; a
+    traced bool (uniform scan / decode) folds into the mask instead."""
+    if cfg.sliding_window is None:
+        return None
+    if isinstance(use_window, bool):
+        return cfg.sliding_window if use_window else None
+    return jnp.where(use_window, cfg.sliding_window, S + 1)
+
+
+def _mixer(p: Params, cfg, x: jax.Array, use_window, mrope_pos):
+    """Sequence-mixing sublayer (attention / hybrid / rwkv time mix)."""
+    h = L.rmsnorm(p["norm1"], x)
+    if cfg.family == "ssm":
+        return ssm_lib.rwkv_time_forward(p["time"], cfg, h)
+    if cfg.mla:
+        return L.mla_attn(p["attn"], cfg, h)
+    window = _window_of(cfg, use_window, h.shape[1])
+    attn = L.gqa_attn(p["attn"], cfg, h, window=window, mrope_pos=mrope_pos)
+    if cfg.family == "hybrid":
+        m = ssm_lib.mamba_forward(p["mamba"], cfg, h)
+        return 0.5 * (L.rmsnorm(p["attn_out_norm"], attn) +
+                      L.rmsnorm(p["mamba_out_norm"], m))
+    return attn
+
+
+def _ffn(p: Params, cfg, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    h = L.rmsnorm(p["norm2"], x)
+    if cfg.family == "ssm":
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        return ssm_lib.rwkv_channel_forward(p["chan"], h, h_prev), jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        out, aux = moe_lib.moe_forward(p["moe"], cfg, h)
+        return out, aux
+    return L.mlp(p["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def decoder_layer(p: Params, cfg, x: jax.Array, use_window: jax.Array,
+                  mrope_pos) -> tuple[jax.Array, jax.Array]:
+    x = hint(x + _mixer(p, cfg, x, use_window, mrope_pos), "act")
+    f, aux = _ffn(p, cfg, x)
+    return hint(x + f, "act"), aux
+
+
+def window_flags(cfg) -> jnp.ndarray:
+    """Per-layer bool: True -> sliding-window attention (Hymba SWA layers)."""
+    if cfg.sliding_window is None:
+        return jnp.zeros((cfg.n_layers,), bool)
+    flags = [i not in cfg.global_layers for i in range(cfg.n_layers)]
+    return jnp.asarray(flags)
+
+
+def window_segments(cfg) -> list[tuple[int, int, bool]]:
+    """Consecutive (start, end, swa?) layer runs. Scanning each segment
+    separately makes the window STATIC inside the segment, enabling the
+    banded-attention fast path (O(S*window) instead of masked O(S^2))."""
+    flags = [i not in cfg.global_layers for i in range(cfg.n_layers)]
+    segs = []
+    start = 0
+    for i in range(1, cfg.n_layers + 1):
+        if i == cfg.n_layers or flags[i] != flags[start]:
+            segs.append((start, i, flags[start]))
+            start = i
+    return segs
+
+
+def _slice_layers(stacked: Params, start: int, end: int) -> Params:
+    return jax.tree.map(lambda a: a[start:end], stacked)
+
+
+def run_stack(stacked: Params, cfg, x: jax.Array, mrope_pos=None) -> tuple[jax.Array, jax.Array]:
+    """Scan the layer stack; returns (hidden, mean aux loss)."""
+
+    def body_fn(static_flag):
+        def body(carry, lp):
+            x, aux = carry
+            fn = decoder_layer
+            if cfg.remat:
+                # full remat: save only each layer's input (bf16 residual);
+                # the backward pass recomputes the layer forward. Any
+                # dot-saving policy here would stash f32 projection outputs
+                # per layer — measured 6x the residual footprint.
+                fn = jax.checkpoint(
+                    decoder_layer,
+                    policy=jax.checkpoint_policies.nothing_saveable,
+                    static_argnums=(1, 3))
+            x, a = fn(lp, cfg, x, static_flag, mrope_pos)
+            return (x, aux + a), None
+        return body
+
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.sliding_window is None:
+        carry, _ = L._scan(body_fn(False), carry, stacked)
+    else:
+        for start, end, swa in window_segments(cfg):
+            carry, _ = L._scan(body_fn(swa), carry,
+                               _slice_layers(stacked, start, end))
+    x, aux = carry
+    return x, aux / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward that also materializes the per-layer decode cache
+# ---------------------------------------------------------------------------
+
+
+def decoder_layer_prefill(p: Params, cfg, x: jax.Array, use_window,
+                          mrope_pos):
+    h = L.rmsnorm(p["norm1"], x)
+    cache: Params = {}
+    if cfg.family == "ssm":
+        t, tc = ssm_lib.rwkv_time_forward(p["time"], cfg, h, return_state=True)
+        x = x + t
+        h2 = L.rmsnorm(p["norm2"], x)
+        h2_prev = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        c = ssm_lib.rwkv_channel_forward(p["chan"], h2, h2_prev)
+        return x + c, {"time": tc, "chan_x_prev": h2[:, -1:]}
+    if cfg.mla:
+        attn, kv = L.mla_attn(p["attn"], cfg, h, return_kv=True)
+        cache.update(kv)
+    else:
+        window = _window_of(cfg, use_window, h.shape[1])
+        attn, kv = L.gqa_attn(p["attn"], cfg, h, window=window,
+                              mrope_pos=mrope_pos, return_kv=True)
+        cache.update(kv)
+    mix = attn
+    if cfg.family == "hybrid":
+        m, mc = ssm_lib.mamba_forward(p["mamba"], cfg, h, return_state=True)
+        cache["mamba"] = mc
+        mix = 0.5 * (L.rmsnorm(p["attn_out_norm"], mix) +
+                     L.rmsnorm(p["mamba_out_norm"], m))
+    x = x + mix
+    f, _ = _ffn(p, cfg, x)
+    return x + f, cache
+
+
+def run_stack_prefill(stacked: Params, cfg, x: jax.Array, mrope_pos=None):
+    """Forward pass that returns (hidden, per-layer stacked decode cache)."""
+
+    def body_fn(static_flag):
+        def body(x, lp):
+            x, cache = decoder_layer_prefill(lp, cfg, x, static_flag,
+                                             mrope_pos)
+            return hint(x, "act"), cache
+        return body
+
+    if cfg.sliding_window is None:
+        return L._scan(body_fn(False), x, stacked)
+    caches = []
+    for start, end, swa in window_segments(cfg):
+        x, cache = L._scan(body_fn(swa), x,
+                           _slice_layers(stacked, start, end))
+        caches.append(cache)
+    stacked_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                 *caches)
+    return x, stacked_cache
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token serve step with per-layer cache)
+# ---------------------------------------------------------------------------
+
+
+def layer_cache_init(cfg, batch: int, seq: int, dtype) -> Params:
+    """Cache for ONE layer; stacked over L by the caller via vmap/broadcast."""
+    if cfg.family == "ssm":
+        return ssm_lib.rwkv_cache_init(cfg, batch, dtype)
+    cache: Params = {}
+    if cfg.mla:
+        cache["c"] = jnp.zeros((batch, seq, cfg.mla_kv_lora), dtype)
+        cache["k_rope"] = jnp.zeros((batch, seq, cfg.mla_qk_rope_dim), dtype)
+    else:
+        cache["k"] = jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.head_dim), dtype)
+    if cfg.family == "hybrid":
+        cache["mamba"] = ssm_lib.mamba_cache_init(cfg, batch, dtype)
+    return cache
+
+
+def stack_cache_init(cfg, batch: int, seq: int, dtype) -> Params:
+    one = layer_cache_init(cfg, batch, seq, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+
+
+def decoder_layer_decode(p: Params, cfg, x: jax.Array, cache: Params,
+                         pos: jax.Array, use_window: jax.Array):
+    h = L.rmsnorm(p["norm1"], x)
+    new_cache = dict(cache)
+    if cfg.family == "ssm":
+        t, tc = ssm_lib.rwkv_time_decode(p["time"], cfg, h, cache["time"])
+        new_cache["time"] = tc
+        x = x + t
+        h2 = L.rmsnorm(p["norm2"], x)
+        c = ssm_lib.rwkv_channel_forward(p["chan"], h2, cache["chan_x_prev"])
+        new_cache["chan_x_prev"] = h2
+        return x + c, new_cache
+    if cfg.mla:
+        attn, kv = L.mla_decode(p["attn"], cfg, h, {"c": cache["c"],
+                                                    "k_rope": cache["k_rope"]}, pos)
+        new_cache.update(kv)
+        mix = attn
+    else:
+        window = _window_of(cfg, use_window, cache["k"].shape[1])
+        attn, kv = L.gqa_decode(p["attn"], cfg, h, cache, pos, window=window)
+        new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
+        mix = attn
+    if cfg.family == "hybrid":
+        m, mc = ssm_lib.mamba_decode(p["mamba"], cfg, h, cache["mamba"])
+        new_cache["mamba"] = mc
+        mix = 0.5 * (L.rmsnorm(p["attn_out_norm"], mix) +
+                     L.rmsnorm(p["mamba_out_norm"], m))
+    x = x + mix
+    f, _ = _ffn_decode(p, cfg, x)
+    return x + f, new_cache
+
+
+def _ffn_decode(p: Params, cfg, x: jax.Array):
+    h = L.rmsnorm(p["norm2"], x)
+    if cfg.family == "moe":
+        return moe_lib.moe_forward(p["moe"], cfg, h)
+    return L.mlp(p["mlp"], h), None
+
+
+def run_stack_decode(stacked: Params, cfg, x: jax.Array, caches: Params,
+                     pos: jax.Array):
+    flags = window_flags(cfg)
+
+    def body(x, inp):
+        lp, cache, w = inp
+        x, new_cache = decoder_layer_decode(lp, cfg, x, cache, pos, w)
+        return hint(x, "act"), new_cache
+
+    x, new_caches = L._scan(body, x, (stacked, caches, flags))
+    return x, new_caches

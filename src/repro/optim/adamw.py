@@ -1,0 +1,136 @@
+"""AdamW with global-norm clipping, warmup+cosine schedule, and optional
+int8 error-feedback gradient compression (for cross-pod data parallelism).
+
+The optimizer state dtype is configurable: large-model configs (grok-1)
+store m/v in bf16 so the fully-sharded state fits 16 GB/chip; the update
+math always runs in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+    compress_grads: bool = False   # int8 + error feedback before the update
+
+
+def lr_at(ocfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / max(ocfg.warmup_steps, 1)
+    frac = (step - ocfg.warmup_steps) / max(
+        ocfg.total_steps - ocfg.warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = ocfg.min_lr_frac + (1 - ocfg.min_lr_frac) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * frac))
+    return ocfg.peak_lr * jnp.where(step < ocfg.warmup_steps, warm, cos)
+
+
+def init_opt(params: Params, ocfg: OptConfig) -> dict:
+    dt = jnp.dtype(ocfg.state_dtype)
+    zeros = lambda p: jax.tree.map(lambda a: jnp.zeros(a.shape, dt), p)
+    state = {"m": zeros(params), "v": zeros(params),
+             "count": jnp.zeros((), jnp.int32)}
+    if ocfg.compress_grads:
+        state["err"] = zeros(params)  # error-feedback residual
+    return state
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g: jax.Array, err: jax.Array):
+    """Error-feedback int8: quantize (g + carried error), carry the residual.
+
+    On a real multi-pod deployment the int8 tensor + fp32 scale is what
+    crosses the (slow) inter-pod links; the residual keeps the optimizer
+    unbiased over time (EF-SGD). Returns (g_hat fp32, new_err).
+    """
+    target = g.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale = quantize_int8(target)
+    g_hat = dequantize_int8(q, scale)
+    return g_hat, (target - g_hat).astype(err.dtype)
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(a.astype(jnp.float32)))
+              for a in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_update(params: Params, grads: Params, state: dict,
+                 ocfg: OptConfig) -> tuple[Params, dict, dict]:
+    count = state["count"] + 1
+    lr = lr_at(ocfg, count)
+
+    if ocfg.compress_grads:
+        pairs = jax.tree.map(compress_with_feedback, grads, state["err"],
+                             is_leaf=lambda x: isinstance(x, jax.Array))
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda pr: pr[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_err = None
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + ocfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + ocfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    if new_err is not None:
+        new_state["err"] = new_err
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

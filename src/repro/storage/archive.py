@@ -1,0 +1,299 @@
+"""Checkpoint archival: replicated hot tier -> RapidRAID coded tier -> repair.
+
+This is the paper's lifecycle applied to training checkpoints:
+
+1. **hot_save** — the freshly written checkpoint object (k blocks) is stored
+   with two replicas overlapped over n nodes exactly per RapidRAID's
+   placement (replica 1 on nodes 0..k-1, replica 2 on nodes n-k..n-1), the
+   layout pipelined insertion produces and the precondition for chain
+   encoding (paper §V).
+2. **archive_step** — the migration: the n nodes run the pipelined encode
+   (each node combines what it stores with the running combination from its
+   predecessor — ``repro.storage.chain`` over a device chain, or the host
+   oracle off-device), each node keeps its coded block c_i, replicas are
+   dropped. Storage falls from 2x to n/k (1.45x for (16,11)).
+3. **restore** — any k live coded blocks reconstruct the object (GF
+   Gaussian elimination on the host builds the decode matrix; the matmul
+   runs through the same GF path).
+4. **repair** — after node loss, missing c_i are recomputed (decode to o,
+   re-encode row i) and placed on replacement nodes.
+
+Straggler mitigation: ``order_chain`` permutes slow nodes to chain ends
+(the paper's Fig. 5 insight); the manifest records the node->codeword-row
+mapping so decode is permutation-aware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.core import classical, gf, rapidraid
+from repro.storage import chain as chain_lib
+from repro.storage.object_store import NodeStore, digest
+
+MANIFEST = "manifests/{step:08d}.json"
+HOT = "hot/{step:08d}/block_{j:02d}.bin"
+ARC = "archive/{step:08d}/c_{i:02d}.bin"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchiveConfig:
+    n: int = 16
+    k: int = 11
+    l: int = 16               # GF(2^16): random coefficients suffice (§V-A)
+    seed: int = 0
+    num_chunks: int = 8       # pipeline chunks per block
+    baseline: str = "rapidraid"  # or "classical" (CEC; for benchmarks)
+
+    def code(self) -> rapidraid.RapidRAIDCode:
+        return rapidraid.make_code(self.n, self.k, l=self.l, seed=self.seed)
+
+
+def _words(blocks_u8: np.ndarray, l: int) -> np.ndarray:
+    dt = gf.WORD_DTYPE[l]
+    return blocks_u8.view(dt)
+
+
+def _u8(blocks_w: np.ndarray) -> np.ndarray:
+    return np.ascontiguousarray(blocks_w).view(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# hot tier (replicated per RapidRAID placement)
+# ---------------------------------------------------------------------------
+
+
+def hot_save(store: NodeStore, step: int, blocks: np.ndarray,
+             acfg: ArchiveConfig) -> dict:
+    """blocks (k, B) uint8 -> two overlapped replicas over n nodes."""
+    place = rapidraid.placement(acfg.n, acfg.k)
+    k, B = blocks.shape
+    assert k == acfg.k
+    for node, held in enumerate(place):
+        for j in held:
+            store.put(node, HOT.format(step=step, j=j), blocks[j].tobytes())
+    manifest = {
+        "step": step, "tier": "hot", "n": acfg.n, "k": acfg.k, "l": acfg.l,
+        "seed": acfg.seed, "block_bytes": int(B),
+        "digests": [digest(blocks[j].tobytes()) for j in range(k)],
+        "placement": [list(h) for h in place],
+    }
+    _put_manifest(store, step, manifest)
+    return manifest
+
+
+def hot_load(store: NodeStore, step: int, manifest: dict) -> np.ndarray:
+    """Read each block from any node still holding a replica."""
+    k, B = manifest["k"], manifest["block_bytes"]
+    out = np.zeros((k, B), dtype=np.uint8)
+    for j in range(k):
+        holders = [i for i, held in enumerate(manifest["placement"])
+                   if j in held]
+        for node in holders:
+            rel = HOT.format(step=step, j=j)
+            if store.has(node, rel):
+                raw = store.get(node, rel)
+                if digest(raw) == manifest["digests"][j]:
+                    out[j] = np.frombuffer(raw, dtype=np.uint8)
+                    break
+        else:
+            raise FileNotFoundError(
+                f"hot block {j} of step {step} lost on all replicas")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# archival migration (the paper's pipelined encode)
+# ---------------------------------------------------------------------------
+
+
+def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
+                 node_speeds: np.ndarray | None = None,
+                 use_devices: bool | None = None) -> dict:
+    """Migrate step's hot replicas to RapidRAID coded blocks; drop hot."""
+    manifest = get_manifest(store, step)
+    assert manifest["tier"] == "hot", f"step {step} already archived"
+    blocks = hot_load(store, step, manifest)
+    code = acfg.code()
+
+    # straggler mitigation: slow nodes to the chain ends (positions with the
+    # least per-tick work); chain position p stores codeword row p on
+    # physical node perm[p].
+    if node_speeds is not None:
+        perm = chain_lib.order_chain(np.asarray(node_speeds), acfg.n, acfg.k)
+    else:
+        perm = np.arange(acfg.n)
+
+    data_w = _words(blocks, acfg.l)
+    nc = acfg.num_chunks  # largest feasible chunk count for this block size
+    while nc > 1 and data_w.shape[1] % nc:
+        nc //= 2
+    if use_devices is None:
+        use_devices = len(jax.devices()) >= acfg.n
+    if use_devices:
+        coded_w = np.asarray(chain_lib.pipelined_encode(
+            code, data_w, num_chunks=nc))
+    else:
+        coded_w, _ = rapidraid.pipeline_encode_local(
+            code, np.asarray(data_w), num_chunks=nc)
+    coded = _u8(coded_w)
+
+    for pos in range(acfg.n):
+        store.put(int(perm[pos]), ARC.format(step=step, i=pos),
+                  coded[pos].tobytes())
+    # drop the hot replicas (the actual capacity saving: 2x -> n/k)
+    for node, held in enumerate(manifest["placement"]):
+        for j in held:
+            store.delete(node, HOT.format(step=step, j=j))
+
+    manifest = {
+        **manifest, "tier": "archive",
+        "perm": [int(p) for p in perm],
+        "coded_digests": [digest(coded[i].tobytes()) for i in range(acfg.n)],
+        "orig_digests": manifest["digests"],
+    }
+    _put_manifest(store, step, manifest)
+    return manifest
+
+
+def archive_classical(store: NodeStore, step: int, acfg: ArchiveConfig) -> dict:
+    """CEC baseline (paper Fig. 1): single node gathers k blocks, computes
+    m parities, scatters them. Used by benchmarks for comparison."""
+    manifest = get_manifest(store, step)
+    blocks = hot_load(store, step, manifest)
+    code = classical.make_code(acfg.n, acfg.k, l=acfg.l)
+    parity_w = classical.encode_np(code, _words(blocks, acfg.l))
+    coded = np.concatenate([blocks, _u8(parity_w)], axis=0)
+    for i in range(acfg.n):
+        store.put(i, ARC.format(step=step, i=i), coded[i].tobytes())
+    for node, held in enumerate(manifest["placement"]):
+        for j in held:
+            store.delete(node, HOT.format(step=step, j=j))
+    manifest = {**manifest, "tier": "archive_classical",
+                "perm": list(range(acfg.n)),
+                "coded_digests": [digest(coded[i].tobytes())
+                                  for i in range(acfg.n)],
+                "orig_digests": manifest["digests"]}
+    _put_manifest(store, step, manifest)
+    return manifest
+
+
+# ---------------------------------------------------------------------------
+# restore & repair
+# ---------------------------------------------------------------------------
+
+
+def _alive_coded(store: NodeStore, step: int, manifest: dict):
+    """[(codeword_row, bytes)] for every surviving coded block."""
+    perm = manifest["perm"]
+    out = []
+    for pos in range(manifest["n"]):
+        node = perm[pos]
+        rel = ARC.format(step=step, i=pos)
+        if store.has(node, rel):
+            raw = store.get(node, rel)
+            if digest(raw) == manifest["coded_digests"][pos]:
+                out.append((pos, raw))
+    return out
+
+def restore_blocks(store: NodeStore, step: int,
+                   acfg: ArchiveConfig) -> np.ndarray:
+    """(k, B) uint8 original blocks from whichever tier survives."""
+    manifest = get_manifest(store, step)
+    if manifest["tier"] == "hot":
+        return hot_load(store, step, manifest)
+    alive = _alive_coded(store, step, manifest)
+    if len(alive) < manifest["k"]:
+        raise FileNotFoundError(
+            f"step {step}: only {len(alive)} of n={manifest['n']} coded "
+            f"blocks alive, need k={manifest['k']}")
+    k, l = manifest["k"], manifest["l"]
+    if manifest["tier"] == "archive_classical":
+        code = classical.make_code(manifest["n"], k, l=l)
+    else:
+        code = rapidraid.RapidRAIDCode(
+            n=manifest["n"], k=k, l=l,
+            **_coeffs_from_seed(manifest))
+    ids = [pos for pos, _ in alive[: manifest["n"]]]
+    shards = np.stack([np.frombuffer(raw, dtype=np.uint8)
+                       for _, raw in alive])
+    shards_w = _words(shards, l)
+    # use the first decodable subset (greedy rank selection inside)
+    if manifest["tier"] == "archive_classical":
+        data_w = classical.decode_np(code, ids, shards_w)
+    else:
+        data_w = rapidraid.decode_np(code, ids, shards_w)
+    blocks = _u8(data_w)
+    for j in range(k):
+        assert digest(blocks[j].tobytes()) == manifest["orig_digests"][j], \
+            f"decode mismatch on block {j}"
+    return blocks
+
+
+def repair(store: NodeStore, step: int, acfg: ArchiveConfig,
+           replacement_nodes: dict[int, int] | None = None) -> list[int]:
+    """Recompute lost coded blocks and place them (on replacements if given).
+
+    Returns the list of repaired codeword rows.
+    """
+    manifest = get_manifest(store, step)
+    assert manifest["tier"] == "archive"
+    alive = {pos for pos, _ in _alive_coded(store, step, manifest)}
+    missing = [pos for pos in range(manifest["n"]) if pos not in alive]
+    if not missing:
+        return []
+    blocks = restore_blocks(store, step, acfg)
+    code = rapidraid.RapidRAIDCode(n=manifest["n"], k=manifest["k"],
+                                   l=manifest["l"],
+                                   **_coeffs_from_seed(manifest))
+    coded_w = rapidraid.encode_np(code, _words(blocks, manifest["l"]))
+    coded = _u8(coded_w)
+    perm = list(manifest["perm"])
+    for pos in missing:
+        node = perm[pos]
+        if replacement_nodes and pos in replacement_nodes:
+            node = replacement_nodes[pos]
+            perm[pos] = node
+        store.put(node, ARC.format(step=step, i=pos), coded[pos].tobytes())
+    manifest["perm"] = perm
+    _put_manifest(store, step, manifest)
+    return missing
+
+
+# ---------------------------------------------------------------------------
+# manifests (replicated on every node)
+# ---------------------------------------------------------------------------
+
+
+def _coeffs_from_seed(manifest: dict) -> dict:
+    code = rapidraid.make_code(manifest["n"], manifest["k"],
+                               l=manifest["l"], seed=manifest["seed"])
+    return {"psi": code.psi, "xi": code.xi}
+
+
+def _put_manifest(store: NodeStore, step: int, manifest: dict) -> None:
+    data = json.dumps(manifest).encode()
+    for i in range(store.n_nodes):
+        store.put(i, MANIFEST.format(step=step), data)
+
+
+def get_manifest(store: NodeStore, step: int) -> dict:
+    for i in range(store.n_nodes):
+        rel = MANIFEST.format(step=step)
+        if store.has(i, rel):
+            return json.loads(store.get(i, rel))
+    raise FileNotFoundError(f"no manifest for step {step}")
+
+
+def list_steps(store: NodeStore) -> list[int]:
+    import os
+    steps = set()
+    for i in range(store.n_nodes):
+        d = store.path(i, "manifests")
+        if os.path.isdir(d):
+            for f in os.listdir(d):
+                steps.add(int(f.split(".")[0]))
+    return sorted(steps)

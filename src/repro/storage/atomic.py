@@ -1,0 +1,82 @@
+"""Classical (atomic) erasure encoding — the paper's baseline (Fig. 1).
+
+Two forms:
+
+* ``encode_local``: the whole-object encode on ONE device (what the paper's
+  single coding node executes; used for Table II CPU-cost benchmarks). Static
+  generator coefficients -> fully unrolled bit-plane GF arithmetic.
+* ``classical_distributed_encode``: the cluster-level flow under SPMD — the
+  k source blocks are gathered, parities computed, each device keeps its own
+  codeword row. On a TPU mesh XLA realizes the gather as a ring all-gather,
+  which is *kinder* to the classical scheme than the paper's star topology
+  (every block squeezes through one NIC); the star model is what
+  ``benchmarks/netsim.py`` simulates. Both views are reported.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import gf
+from repro.core.classical import ClassicalRSCode
+from repro.core.rapidraid import RapidRAIDCode
+
+AXIS = "chain"
+
+
+@functools.partial(jax.jit, static_argnames=("code",))
+def encode_local(code, data_packed: jax.Array) -> jax.Array:
+    """Single-device whole-object encode; (k, Bp) packed -> (rows, Bp) packed.
+
+    For a classical code the systematic rows are free, so only the m parity
+    rows are computed; for RapidRAID all n rows are (that is the paper's
+    Table II accounting: both encode the same 704 MB object).
+    """
+    if isinstance(code, ClassicalRSCode):
+        M = code.parity_matrix
+    elif isinstance(code, RapidRAIDCode):
+        M = code.G
+    else:
+        raise TypeError(type(code))
+    return gf.gf_matvec_packed(M, data_packed, code.l)
+
+
+def _distributed_shard(local, *, code: ClassicalRSCode):
+    """Per-device body: local (1, Bp) own source block (zeros for i >= k)."""
+    idx = lax.axis_index(AXIS)
+    gathered = lax.all_gather(local[0], AXIS)          # (n, Bp)
+    data = gathered[: code.k]                          # source blocks
+    parity = gf.gf_matvec_packed(code.parity_matrix, data, code.l)  # (m, Bp)
+    full = jnp.concatenate([data, parity], axis=0)     # (n, Bp)
+    own = jnp.take(full, idx, axis=0)
+    return own[None]
+
+
+def classical_distributed_encode(code: ClassicalRSCode, data,
+                                 mesh: Mesh | None = None) -> jax.Array:
+    """data (k, B) words -> codeword (n, B) words, row i materialized on device i."""
+    data = np.asarray(data)
+    assert data.shape[0] == code.k
+    if mesh is None:
+        devs = jax.devices()[: code.n]
+        mesh = Mesh(np.asarray(devs), (AXIS,))
+    lanes = gf.LANES[code.l]
+    assert data.shape[1] % lanes == 0
+    Bp = data.shape[1] // lanes
+    local = np.zeros((code.n, data.shape[1]), dtype=gf.WORD_DTYPE[code.l])
+    local[: code.k] = data
+    local_packed = np.asarray(gf.pack_u32(jnp.asarray(local), code.l))
+    local_packed = jax.device_put(
+        jnp.asarray(local_packed), NamedSharding(mesh, P(AXIS)))
+
+    fn = jax.jit(jax.shard_map(
+        functools.partial(_distributed_shard, code=code),
+        mesh=mesh, in_specs=(P(AXIS),), out_specs=P(AXIS)))
+    out_packed = fn(local_packed)
+    assert out_packed.shape == (code.n, Bp)
+    return gf.unpack_u32(out_packed, code.l)

@@ -1,0 +1,291 @@
+"""Sharding rules: parameter / optimizer / batch / KV-cache PartitionSpecs.
+
+Mesh axes: ``("data", "model")`` single-pod or ``("pod", "data", "model")``
+multi-pod. Conventions (Megatron + FSDP hybrid):
+
+* batch (and therefore activations) shard over the data axes
+  (``pod`` acts as an outer data axis);
+* column-parallel weights (wq/wk/wv, MLP in/gate, MoE experts) put their
+  output dim on ``model``; row-parallel outputs (wo) their input dim;
+* every weight additionally FSDP-shards its non-model dim over the data
+  axes when divisible (ZeRO-3: XLA inserts all-gather on use /
+  reduce-scatter on grads);
+* MoE experts go on ``model`` when n_experts divides it (phi3.5: 16/16,
+  pure EP); otherwise d_ff is tensor-sharded within each expert (grok: 8
+  experts on 16 chips -> TP-within-expert);
+* decode KV caches shard batch over data and the sequence axis over
+  ``model`` (flash-decode style: XLA turns softmax/contraction over the
+  sharded axis into partial reductions + small all-reduces instead of
+  gathering the cache). For long_500k (batch 1) the cache seq axis shards
+  over the whole mesh.
+
+Divisibility is always checked; non-divisible dims stay unsharded
+(e.g. hymba's 25 heads on a 16-chip model axis).
+"""
+from __future__ import annotations
+
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as model_lib
+
+STACKED_TOPS = ("layers", "enc_layers", "dec_layers")
+
+
+def set_activation_hints(mesh: Mesh, *, batch: int | None = None,
+                         seq_shard: bool = False,
+                         layout: str = "2d") -> None:
+    """Install activation constraints for this mesh (see repro.hints).
+
+    ``batch``: global batch of the step being lowered; batch dims that the
+    data axes do not divide are left unsharded (e.g. long-context batch 1).
+    ``seq_shard``: additionally shard the activations' seq axis over
+    ``model`` between layers (sequence parallelism; hillclimb option).
+    Without hints GSPMD tends to keep activations batch-replicated while
+    sharding d_model over the data axis (propagated from the FSDP'd embed
+    table), which blows the per-device footprint ~dp-fold.
+    """
+    from repro import hints as hints_lib
+    dp = data_axes(mesh, layout)
+    dps = _size(mesh, dp)
+    bdim = dp if (batch is None or batch % dps == 0) else None
+    sdim = "model" if (seq_shard and layout != "fsdp") else None
+    vdim = "model" if layout != "fsdp" else None
+    hints_lib.set_hints({
+        "act": NamedSharding(mesh, P(bdim, sdim, None)),       # (B, S, D)
+        "logits": NamedSharding(mesh, P(bdim, None, vdim)),    # (B, S, V)
+        "logits2d": NamedSharding(mesh, P(bdim, vdim)),        # (B, V)
+    })
+
+
+def data_axes(mesh: Mesh, layout: str = "2d") -> tuple[str, ...]:
+    """Axes that carry the batch (and FSDP shards).
+
+    layout="2d"  : classic hybrid — batch/FSDP over (pod, data), tensor
+                   parallelism over model.
+    layout="fsdp": pure ZeRO-3 — the model axis is repurposed as more data
+                   parallelism (batch/FSDP over every axis, no TP). For
+                   models whose layers fit one chip this removes the
+                   per-layer tensor-parallel all-reduces entirely; weight
+                   all-gathers amortize over the whole layer's compute.
+    layout="serve": weights stay stationary — TP over model only, NO FSDP
+                   (decode has no compute to amortize weight gathers);
+                   batch/caches shard over the data axes as usual.
+    """
+    if layout == "fsdp":
+        return tuple(mesh.axis_names)
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def model_size(mesh: Mesh, layout: str = "2d") -> int:
+    return 1 if layout == "fsdp" else int(mesh.shape["model"])
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+_COL_PARALLEL = {"wq", "wk", "wv", "wi", "wg", "win", "wuq", "wuk", "wuv",
+                 "wr"}
+_ROW_PARALLEL = {"wo", "wout"}
+_FSDP_ONLY = {"wdq", "wdkv", "wkr", "wdt", "wbc", "maa_w1", "decay_w1",
+              "router"}
+
+
+def _param_rule(path: str, shape: tuple[int, ...], mesh: Mesh,
+                layout: str = "2d") -> P:
+    fsdp = data_axes(mesh, layout)
+    fs = _size(mesh, fsdp)
+    ms = model_size(mesh, layout)
+
+    def m_ok(d):
+        return "model" if ms > 1 and d % ms == 0 else None
+
+    def f_ok(d):
+        if layout == "serve":
+            return None  # stationary weights: no gather-on-use
+        if d % fs == 0:
+            return fsdp
+        # graded fallback: shard over the largest axis prefix that divides
+        # (e.g. hymba's d_model=1600 on 256 chips -> shard 16-way over
+        # "data", replicate over "model")
+        for cut in range(len(fsdp) - 1, 0, -1):
+            sub = fsdp[:cut]
+            if d % _size(mesh, sub) == 0:
+                return sub if len(sub) > 1 else sub[0]
+        return None
+
+    parts = path.split("/")
+    name = parts[-1]
+    parent = parts[-2] if len(parts) > 1 else ""
+
+    if name == "embed":
+        return P(m_ok(shape[0]), f_ok(shape[1]))
+    if name == "lm_head":
+        return P(f_ok(shape[0]), m_ok(shape[1]))
+    if parent == "moe":
+        if name == "router":
+            return P(f_ok(shape[0]), None)
+        E = shape[0]
+        if name in ("wi", "wg"):
+            if ms > 1 and E % ms == 0:
+                return P("model", f_ok(shape[1]), None)
+            return P(None, f_ok(shape[1]), m_ok(shape[2]))
+        if name == "wo":
+            if ms > 1 and E % ms == 0:
+                return P("model", None, f_ok(shape[2]))
+            return P(None, m_ok(shape[1]), f_ok(shape[2]))
+    if parent == "chan":  # rwkv channel mix: wv is (F, D) row-parallel
+        if name == "wv":
+            return P(m_ok(shape[0]), f_ok(shape[1]))
+        if name in ("wk", "wr"):
+            return P(f_ok(shape[0]), m_ok(shape[1]))
+    if len(shape) == 2 and name in _ROW_PARALLEL:
+        return P(m_ok(shape[0]), f_ok(shape[1]))
+    if len(shape) == 2 and name in _COL_PARALLEL:
+        return P(f_ok(shape[0]), m_ok(shape[1]))
+    if len(shape) == 2 and name in _FSDP_ONLY:
+        return P(f_ok(shape[0]), None)
+    if name == "maa_w2":
+        return P(None, None, f_ok(shape[-1]))
+    if name == "decay_w2":
+        return P(None, f_ok(shape[-1]))
+    if name == "conv":
+        return P(None, m_ok(shape[-1]))
+    if len(shape) >= 2:
+        return P(f_ok(shape[0]), *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: model_lib.ModelConfig, mesh: Mesh, params_shape,
+                layout: str = "2d") -> dict:
+    """PartitionSpec pytree matching the params pytree (shapes only)."""
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        top = ps.split("/")[0]
+        shape = tuple(leaf.shape)
+        if top in STACKED_TOPS:
+            inner = _param_rule(ps, shape[1:], mesh, layout)
+            return P(None, *inner)
+        return _param_rule(ps, shape, mesh, layout)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def layer_param_specs(cfg, mesh: Mesh, layer_shape,
+                      layout: str = "2d") -> dict:
+    """Specs for ONE layer's params (no leading stacked-L dim)."""
+    def leaf_spec(path, leaf):
+        return _param_rule(_path_str(path), tuple(leaf.shape), mesh, layout)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, layer_shape)
+
+
+def param_shardings(cfg, mesh: Mesh, params_shape):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, params_shape))
+
+
+def opt_specs(cfg, mesh: Mesh, pspecs, ocfg=None) -> dict:
+    """Optimizer state mirrors parameter sharding; count is replicated.
+    The int8-compression error-feedback buffer (when enabled) mirrors the
+    parameter sharding too."""
+    out = {"m": pspecs, "v": pspecs, "count": P()}
+    if ocfg is not None and getattr(ocfg, "compress_grads", False):
+        out["err"] = pspecs
+    return out
+
+
+# ---------------------------------------------------------------------------
+# batches & caches
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg, mesh: Mesh, layout: str = "2d") -> dict:
+    dp = data_axes(mesh, layout)
+    specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.mrope_sections is not None:
+        specs["mrope_pos"] = P(None, dp, None)
+    if cfg.family == "encdec":
+        specs["enc_frames"] = P(dp, None, None)
+    return specs
+
+
+def cache_specs(cfg, mesh: Mesh, cache_shape, layout: str = "2d") -> dict:
+    dp = data_axes(mesh, layout)
+    dps = _size(mesh, dp)
+    ms = model_size(mesh, layout)
+    all_axes = tuple(mesh.axis_names)
+    alls = _size(mesh, all_axes)
+
+    def leaf_spec(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        shape = tuple(leaf.shape)  # leading L
+        B = shape[1]
+        bdim = dp if B % dps == 0 else None
+        if name in ("k", "v", "c", "k_rope"):
+            S = shape[2]
+            if B == 1 and S % alls == 0:
+                sdim = all_axes          # long-context: whole-mesh seq shard
+            elif bdim is not None and ms > 1 and S % ms == 0:
+                sdim = "model"
+            else:
+                sdim = None
+            rest = [None] * (len(shape) - 3)
+            return P(None, bdim, sdim, *rest)
+        if name in ("xk", "xv"):         # whisper cross K/V (B,T,H,Dh)
+            H = shape[3]
+            return P(None, bdim, None,
+                     "model" if ms > 1 and H % ms == 0 else None, None)
+        if name == "state":              # (L,B,H,dk,dv|ns)
+            H = shape[2]
+            return P(None, bdim,
+                     "model" if ms > 1 and H % ms == 0 else None, None, None)
+        if name == "conv":               # (L,B,3,di)
+            di = shape[3]
+            return P(None, bdim, None,
+                     "model" if ms > 1 and di % ms == 0 else None)
+        return P(None, bdim, *([None] * (len(shape) - 2)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
+def decode_input_specs(cfg, mesh: Mesh, batch: int | None = None,
+                       layout: str = "2d") -> dict:
+    dp = data_axes(mesh, layout)
+    if batch is not None and batch % _size(mesh, dp) != 0:
+        dp = None  # long-context decode: batch 1 stays replicated
+    return {"token": P(dp, None), "pos": P()}
+
+
+def prefill_input_specs(cfg, mesh: Mesh, batch: int | None = None,
+                        layout: str = "2d") -> dict:
+    dp = data_axes(mesh, layout)
+    if batch is not None and batch % _size(mesh, dp) != 0:
+        dp = None
+    specs = {"tokens": P(dp, None)}
+    if cfg.mrope_sections is not None:
+        specs["mrope_pos"] = P(None, dp, None)
+    if cfg.family == "encdec":
+        specs["enc_frames"] = P(dp, None, None)
+    return specs

@@ -1,0 +1,51 @@
+"""train_step / prefill_step / serve_step builders (pure functions to jit).
+
+The launcher (and the dry-run) binds these to a mesh with explicit
+in/out_shardings from ``repro.train.sharding``; GSPMD propagates the rest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.optim import adamw
+
+
+def build_train_step(cfg: model_lib.ModelConfig, ocfg: adamw.OptConfig):
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(model_lib.loss_fn, has_aux=True)
+        (_, metrics), grads = grad_fn(params, cfg, batch)
+        params, opt_state, om = adamw.apply_update(params, grads, opt_state,
+                                                   ocfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg: model_lib.ModelConfig):
+    def eval_step(params, batch):
+        _, metrics = model_lib.loss_fn(params, cfg, batch)
+        return metrics
+
+    return eval_step
+
+
+def build_prefill_step(cfg: model_lib.ModelConfig):
+    def prefill_step(params, inputs):
+        return model_lib.prefill(params, cfg, inputs["tokens"],
+                                 mrope_pos=inputs.get("mrope_pos"),
+                                 enc_frames=inputs.get("enc_frames"))
+
+    return prefill_step
+
+
+def build_serve_step(cfg: model_lib.ModelConfig):
+    def serve_step(params, cache, token, pos):
+        logits, cache = model_lib.decode_step(params, cfg, cache, token, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, cache
+
+    return serve_step

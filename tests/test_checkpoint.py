@@ -1,0 +1,150 @@
+"""Checkpoint manager + archival tier: lifecycle, failures, repair,
+property-tested recovery (any <= n-k node losses must restore exactly)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+from repro.storage import archive as arc
+from repro.storage import object_store as obj
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=10,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def _state(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": rng.standard_normal((40, 50)).astype(np.float32),
+                   "b": jnp.asarray(rng.standard_normal(17), jnp.bfloat16)},
+        "opt": {"m": rng.standard_normal((40, 50)).astype(np.float32),
+                "count": np.int32(7)},
+        "step": np.int64(900),
+    }
+
+
+def test_codec_roundtrip():
+    state = _state()
+    blob = obj.tree_to_bytes(state)
+    back = obj.bytes_to_leaves(blob, state)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(1, 200))
+def test_split_join_blocks(seed, nbytes):
+    rng = np.random.default_rng(seed)
+    blob = rng.integers(0, 256, size=nbytes, dtype=np.uint8).tobytes()
+    blocks = obj.split_blocks(blob, k=11, lane_bytes=64)
+    assert blocks.shape[1] % 64 == 0
+    assert obj.join_blocks(blocks, nbytes) == blob
+
+
+def test_lifecycle_hot_to_archive(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path), hot_keep=1))
+    s = _state()
+    mgr.save(10, s)
+    assert mgr.tier(10) == "hot"
+    mgr.save(20, s)                       # step 10 migrates
+    assert mgr.tier(10) == "archive" and mgr.tier(20) == "hot"
+    r = mgr.restore(10, s)
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  s["params"]["w"])
+
+
+@hypothesis.given(st.sets(st.integers(0, 15), max_size=5), st.integers(0, 5))
+def test_archive_survives_any_5_failures(failed, seed):
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        mgr = CheckpointManager(CheckpointConfig(root=tmp, hot_keep=0))
+        s = _state(seed)
+        mgr.save(1, s)
+        assert mgr.tier(1) == "archive"   # hot_keep=0 -> immediate migration
+        for i in failed:
+            mgr.store.fail_node(i)
+        r = mgr.restore(1, s)
+        np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                      s["params"]["w"])
+        np.testing.assert_array_equal(
+            np.asarray(r["params"]["b"], np.float32),
+            np.asarray(s["params"]["b"], np.float32))
+
+
+def test_six_failures_unrecoverable(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path), hot_keep=0))
+    s = _state()
+    mgr.save(1, s)
+    for i in range(6):                    # n-k = 5 is the limit
+        mgr.store.fail_node(i)
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(1, s)
+
+
+def test_repair_restores_full_redundancy(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path), hot_keep=0))
+    s = _state()
+    mgr.save(1, s)
+    for i in (2, 9):
+        mgr.store.fail_node(i)
+    repaired = mgr.repair(1)
+    assert sorted(repaired) == [2, 9]
+    # now fail 5 MORE nodes: still recoverable thanks to the repair
+    for i in (0, 1, 3, 4, 5):
+        mgr.store.fail_node(i)
+    r = mgr.restore(1, s)
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  s["params"]["w"])
+
+
+def test_repair_onto_replacement_nodes(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path), hot_keep=0))
+    s = _state()
+    mgr.save(1, s)
+    mgr.store.fail_node(4)
+    # node 4's row moves to (healthy) node 4 slot replacement: reuse node 4
+    repaired = mgr.repair(1, replacement_nodes={4: 4})
+    assert repaired == [4]
+    r = mgr.restore(1, s)
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  s["params"]["w"])
+
+
+def test_classical_baseline_archive(tmp_path):
+    """CEC path (benchmarked against RapidRAID) also restores correctly."""
+    acfg = arc.ArchiveConfig(n=16, k=11, l=16)
+    store = obj.NodeStore(str(tmp_path), 16)
+    rng = np.random.default_rng(0)
+    blocks = rng.integers(0, 256, size=(11, 640), dtype=np.uint8)
+    arc.hot_save(store, 5, blocks, acfg)
+    m = arc.get_manifest(store, 5)
+    m["blob_len"] = blocks.size
+    arc._put_manifest(store, 5, m)
+    arc.archive_classical(store, 5, acfg)
+    for i in (1, 6, 12):
+        store.fail_node(i)
+    got = arc.restore_blocks(store, 5, acfg)
+    np.testing.assert_array_equal(got, blocks)
+
+
+def test_straggler_aware_archive(tmp_path):
+    """Archival with a node-speed vector permutes the chain but decodes the
+    same object."""
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path), hot_keep=0))
+    s = _state()
+    speeds = np.linspace(1.0, 0.1, 16)    # node 15 slowest
+    blob = obj.tree_to_bytes(s)
+    blocks = obj.split_blocks(blob, 11, lane_bytes=64)
+    m = arc.hot_save(mgr.store, 3, blocks, mgr.acfg)
+    m["blob_len"] = len(blob)
+    arc._put_manifest(mgr.store, 3, m)
+    manifest = arc.archive_step(mgr.store, 3, mgr.acfg, node_speeds=speeds)
+    assert manifest["perm"] != list(range(16))  # reordering happened
+    r = mgr.restore(3, s)
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  s["params"]["w"])

@@ -1,0 +1,119 @@
+"""GF(2^l) arithmetic: field axioms (hypothesis), table/packed-path agreement."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import gf
+
+FIELDS = [8, 16]
+
+
+def slow_gf_mul(a: int, b: int, l: int) -> int:
+    """Bitwise carry-less multiply + polynomial reduction (independent oracle)."""
+    prod = 0
+    aa, bb = a, b
+    while bb:
+        if bb & 1:
+            prod ^= aa
+        aa <<= 1
+        bb >>= 1
+    # reduce modulo the primitive polynomial
+    poly = gf.PRIM_POLY[l]
+    for shift in range(prod.bit_length() - 1, l - 1, -1):
+        if prod & (1 << shift):
+            prod ^= poly << (shift - l)
+    return prod
+
+
+@pytest.mark.parametrize("l", FIELDS)
+def test_tables_vs_bitwise_oracle(l):
+    rng = np.random.default_rng(0)
+    q = 1 << l
+    a = rng.integers(0, q, size=200)
+    b = rng.integers(0, q, size=200)
+    want = np.array([slow_gf_mul(int(x), int(y), l) for x, y in zip(a, b)])
+    got = gf.gf_mul_np(a, b, l)
+    np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 255), st.integers(1, 255), st.integers(0, 255))
+def test_field_axioms_gf8(a, b, c):
+    l = 8
+    m = lambda x, y: int(gf.gf_mul_np(np.int64(x), np.int64(y), l))
+    assert m(a, b) == m(b, a)
+    assert m(a, m(b, c)) == m(m(a, b), c)
+    assert m(a, b ^ c) == m(a, b) ^ m(a, c)  # distributivity over xor
+    assert m(a, gf.gf_inv_scalar(a, l)) == 1
+    assert m(a, 1) == a and m(a, 0) == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 65535), st.integers(1, 65535))
+def test_inverse_gf16(a, b):
+    l = 16
+    m = lambda x, y: int(gf.gf_mul_np(np.int64(x), np.int64(y), l))
+    assert m(m(a, b), gf.gf_inv_scalar(b, l)) == a
+
+
+@pytest.mark.parametrize("l", FIELDS)
+def test_jnp_matches_np(l):
+    rng = np.random.default_rng(1)
+    q = 1 << l
+    a = rng.integers(0, q, size=(7, 33)).astype(gf.WORD_DTYPE[l])
+    b = rng.integers(0, q, size=(7, 33)).astype(gf.WORD_DTYPE[l])
+    np.testing.assert_array_equal(np.asarray(gf.gf_mul(jnp.asarray(a), jnp.asarray(b), l)),
+                                  gf.gf_mul_np(a, b, l))
+
+
+@pytest.mark.parametrize("l", FIELDS)
+def test_pack_unpack_roundtrip(l):
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 1 << l, size=(3, 16)).astype(gf.WORD_DTYPE[l])
+    xp = gf.pack_u32(jnp.asarray(x), l)
+    assert xp.dtype == jnp.uint32 and xp.shape == (3, 16 // gf.LANES[l])
+    np.testing.assert_array_equal(np.asarray(gf.unpack_u32(xp, l)), x)
+
+
+@pytest.mark.parametrize("l", FIELDS)
+@pytest.mark.parametrize("c", [0, 1, 2, 97, 255])
+def test_bitplane_const_mul_matches_table(l, c):
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 1 << l, size=64).astype(gf.WORD_DTYPE[l])
+    xp = gf.pack_u32(jnp.asarray(x), l)
+    got = gf.unpack_u32(gf.gf_mul_const_packed(xp, c, l), l)
+    want = gf.gf_mul_np(x, np.int64(c), l)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("l", FIELDS)
+def test_packed_matvec_matches_matmul(l):
+    rng = np.random.default_rng(4)
+    n, k, B = 6, 4, 32
+    G = rng.integers(0, 1 << l, size=(n, k))
+    X = rng.integers(0, 1 << l, size=(k, B)).astype(gf.WORD_DTYPE[l])
+    Xp = gf.pack_u32(jnp.asarray(X), l)
+    got = gf.unpack_u32(gf.gf_matvec_packed(G, Xp, l), l)
+    want = gf.gf_matmul_np(G, X, l)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_rank_and_inverse():
+    l = 8
+    rng = np.random.default_rng(5)
+    # random invertible matrix: build as product of identity-plus-noise until full rank
+    for _ in range(5):
+        M = rng.integers(0, 256, size=(5, 5))
+        r = gf.gf_rank_np(M, l)
+        assert 0 <= r <= 5
+        if r == 5:
+            inv = gf.gf_inv_matrix_np(M, l)
+            prod = gf.gf_matmul_np(inv, M.astype(gf.WORD_DTYPE[l]), l)
+            np.testing.assert_array_equal(prod, np.eye(5, dtype=np.uint8))
+    # known singular matrix
+    S = np.array([[1, 2], [1, 2]])
+    assert gf.gf_rank_np(S, l) == 1
+    with pytest.raises(np.linalg.LinAlgError):
+        gf.gf_inv_matrix_np(S, l)

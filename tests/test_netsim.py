@@ -1,0 +1,57 @@
+"""Network-model validation against the paper's Eq. (1) / Eq. (2)."""
+import numpy as np
+
+from benchmarks import netsim
+
+
+def test_ideal_classical_matches_eq1():
+    """With streamlined overlap and free encode, the fluid model reduces to
+    the paper's Eq. (1) best case."""
+    import dataclasses
+    cfg = dataclasses.replace(netsim.NetConfig(), cec_overlap=1.0,
+                              cec_encode_rate=None)
+    t = netsim.classical_time(cfg, coder=0)
+    eq1 = netsim.eq1_classical(cfg)
+    assert abs(t - eq1) / eq1 < 0.05, (t, eq1)
+
+
+def test_pipeline_matches_eq2():
+    cfg = netsim.NetConfig()
+    t = netsim.pipeline_time(cfg)
+    eq2 = netsim.eq2_pipeline(cfg)
+    assert abs(t - eq2) / eq2 < 0.1, (t, eq2)
+
+
+def test_single_object_reduction_about_90pct():
+    cfg = netsim.NetConfig()
+    t_cec = netsim.classical_time(cfg, coder=0)
+    t_rr = netsim.pipeline_time(cfg)
+    red = 1 - t_rr / t_cec
+    assert 0.80 < red < 0.97, red          # paper: "up to 90%"
+
+
+def test_concurrent_objects_modest_gain():
+    cfg = netsim.NetConfig()
+    t_cec = netsim.classical_time(cfg, coder=0, n_objects=16)
+    t_rr = netsim.pipeline_time(cfg, n_objects=16)
+    red = 1 - t_rr / t_cec
+    assert 0.05 < red < 0.5, red           # paper: "up to 20%"
+
+
+def test_congestion_monotone_for_pipeline():
+    cfg = netsim.NetConfig()
+    times = [netsim.pipeline_time(cfg, frozenset(range(c)))
+             for c in range(5)]
+    assert all(b >= a - 1e-9 for a, b in zip(times, times[1:]))
+
+
+def test_reorder_helps_single_congested_node():
+    cfg = netsim.NetConfig()
+    congested = frozenset({7})             # interior position
+    t_plain = netsim.pipeline_time(cfg, congested)
+    speeds = np.asarray([netsim.node_bw(cfg, congested, i)
+                         for i in range(16)])
+    from repro.storage.chain import order_chain
+    order = order_chain(speeds, 16, 11)
+    t_reordered = netsim.pipeline_time(cfg, congested, order=order)
+    assert t_reordered < t_plain

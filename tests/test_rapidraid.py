@@ -1,0 +1,140 @@
+"""RapidRAID code construction: paper examples, MDS conjecture, roundtrips."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import classical, fault_tolerance as ft, gf, rapidraid as rr
+
+
+def test_placement_2k_and_paper_64_example():
+    # (8,4): two disjoint replicas (paper §IV-A)
+    assert rr.placement(8, 4) == ((0,), (1,), (2,), (3,), (0,), (1,), (2,), (3,))
+    # (6,4): overlapped replicas exactly as in paper §IV-C
+    #   node1: o1 | node2: o2 | node3: o3,o1 | node4: o4,o2 | node5: o3 | node6: o4
+    assert rr.placement(6, 4) == ((0,), (1,), (2, 0), (3, 1), (2,), (3,))
+
+
+def test_generator_matrix_matches_paper_84_structure():
+    """Symbolically verify G against the paper's explicit (8,4) matrix."""
+    n, k, l = 8, 4, 16
+    n_psi, n_xi = rr.coeff_slots(n, k)
+    assert (n_psi, n_xi) == (7, 8)  # psi_1..psi_7, xi_1..xi_8 in the paper
+    rng = np.random.default_rng(42)
+    psi = [int(v) for v in rng.integers(1, 1 << l, size=n_psi)]
+    xi = [int(v) for v in rng.integers(1, 1 << l, size=n_xi)]
+    G = rr.build_generator(n, k, psi, xi, l).astype(np.int64)
+    p, x = psi, xi  # 0-based: paper's psi_i == p[i-1], xi_i == x[i-1]
+    expect = np.array([
+        [x[0], 0, 0, 0],
+        [p[0], x[1], 0, 0],
+        [p[0], p[1], x[2], 0],
+        [p[0], p[1], p[2], x[3]],
+        [p[0] ^ x[4], p[1], p[2], p[3]],
+        [p[0] ^ p[4], p[1] ^ x[5], p[2], p[3]],
+        [p[0] ^ p[4], p[1] ^ p[5], p[2] ^ x[6], p[3]],
+        [p[0] ^ p[4], p[1] ^ p[5], p[2] ^ p[6], p[3] ^ x[7]],
+    ])
+    np.testing.assert_array_equal(G, expect)
+
+
+def test_paper_84_natural_dependency_is_c1_c2_c5_c6():
+    """Paper §IV-B: exactly one unremovable dependent 4-subset, {c1,c2,c5,c6}."""
+    nat = ft.natural_dependencies(8, 4, l=16, trials=3, seed=7)
+    assert nat == {(0, 1, 4, 5)}
+
+
+@pytest.mark.parametrize("n", [6, 8, 10])
+def test_mds_conjecture_small(n):
+    """Conjecture 1: (n,k) RapidRAID is MDS iff k >= n-3 (checked for small n)."""
+    for k in range((n + 1) // 2, n):
+        nat = ft.natural_dependencies(n, k, l=16, trials=2, seed=11)
+        if k >= n - 3:
+            assert not nat, f"(n={n},k={k}) should be MDS"
+        # (below n-3 natural dependencies are allowed; (8,4) asserts one exists)
+
+
+@pytest.mark.parametrize("n,k", [(8, 4), (6, 4), (8, 6), (12, 9), (16, 11)])
+def test_encode_decode_roundtrip(n, k):
+    l = 16
+    code = rr.make_code(n, k, l=l, seed=3)
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 1 << l, size=(k, 24)).astype(gf.WORD_DTYPE[l])
+    c = rr.encode_np(code, data)
+    assert c.shape == (n, 24)
+    # decode from the first k shards if decodable, else from a known-good set
+    dep = set(ft.dependent_ksubsets(code.G, k, l))
+    for ids in itertools.islice(
+            (s for s in itertools.combinations(range(n), k) if s not in dep), 5):
+        got = rr.decode_np(code, ids, c[list(ids)])
+        np.testing.assert_array_equal(got, data)
+    for ids in itertools.islice(iter(dep), 2):
+        with pytest.raises(ValueError):
+            rr.decode_matrix(code, ids)
+
+
+def test_decode_from_more_than_k_shards():
+    code = rr.make_code(8, 4, l=16, seed=3)
+    rng = np.random.default_rng(1)
+    data = rng.integers(0, 1 << 16, size=(4, 8)).astype(np.uint16)
+    c = rr.encode_np(code, data)
+    ids = [0, 1, 4, 5, 7]  # contains the dependent 4-set but rank is still 4
+    got = rr.decode_np(code, ids, c[ids])
+    np.testing.assert_array_equal(got, data)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(3, 6), st.integers(0, 3), st.integers(0, 2 ** 31 - 1))
+def test_property_any_k_of_n_decodes_when_mds(k, extra, seed):
+    """Property: for MDS params (k >= n-3) every k-subset decodes the object."""
+    n = min(k + extra, 2 * k)
+    code = rr.make_code(n, k, l=16, seed=seed)
+    if ft.dependent_ksubsets(code.G, k, 16):
+        return  # rare accidental dependency at this seed; not the property under test
+    rng = np.random.default_rng(seed % 2 ** 16)
+    data = rng.integers(0, 1 << 16, size=(k, 4)).astype(np.uint16)
+    c = rr.encode_np(code, data)
+    for ids in itertools.combinations(range(n), k):
+        np.testing.assert_array_equal(rr.decode_np(code, ids, c[list(ids)]), data)
+
+
+@pytest.mark.parametrize("n,k,chunks", [(8, 4, 4), (6, 4, 3), (16, 11, 8)])
+def test_pipeline_local_matches_matrix_encode(n, k, chunks):
+    l = 16
+    code = rr.make_code(n, k, l=l, seed=5)
+    rng = np.random.default_rng(2)
+    B = chunks * 6
+    data = rng.integers(0, 1 << l, size=(k, B)).astype(gf.WORD_DTYPE[l])
+    want = rr.encode_np(code, data)
+    got, ticks = rr.pipeline_encode_local(code, data, num_chunks=chunks)
+    np.testing.assert_array_equal(got, want)
+    assert ticks == chunks + n - 1  # Eq. (2): T = tau_block + (n-1) tau_pipe
+
+
+def test_jnp_encode_matches_np():
+    import jax.numpy as jnp
+    code = rr.make_code(8, 4, l=8, seed=9)
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 256, size=(4, 16)).astype(np.uint8)
+    np.testing.assert_array_equal(np.asarray(rr.encode(code, jnp.asarray(data))),
+                                  rr.encode_np(code, data))
+
+
+def test_storage_overhead_16_11():
+    code = rr.make_code(16, 11)
+    assert abs(code.storage_overhead - 16 / 11) < 1e-9  # ~1.45x, paper §VI-A
+
+
+def test_classical_cauchy_is_mds_and_systematic():
+    l = 8
+    code = classical.make_code(8, 4, l=l)
+    assert not ft.dependent_ksubsets(code.G, 4, l)  # MDS: every 4-subset decodes
+    rng = np.random.default_rng(4)
+    data = rng.integers(0, 256, size=(4, 10)).astype(np.uint8)
+    parity = classical.encode_np(code, data)
+    cw = np.concatenate([data, parity])
+    np.testing.assert_array_equal(cw[:4], data)  # systematic
+    for ids in [(0, 1, 2, 3), (4, 5, 6, 7), (0, 2, 5, 7)]:
+        np.testing.assert_array_equal(classical.decode_np(code, ids, cw[list(ids)]), data)

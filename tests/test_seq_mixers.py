@@ -1,0 +1,172 @@
+"""Chunked sequence-mixer math vs naive sequential oracles.
+
+The chunked formulations (flash attention tiles, SSD chunk scan, WKV6 chunk
+scan) are the performance-critical reformulations; these tests pin them to
+slow-but-obviously-correct references, with hypothesis sweeping shapes.
+"""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models import ssm
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=12,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    B, S, H, Dh = q.shape
+    Kh = k.shape[2]
+    rep = H // Kh
+    qg = q.reshape(B, S, Kh, rep, Dh).astype(np.float32)
+    s = np.einsum("bqkrd,bskd->bkrqs", qg, np.asarray(k, np.float32))
+    s = s / np.sqrt(Dh)
+    rows = np.arange(S)[:, None]
+    cols = np.arange(S)[None, :]
+    ok = cols <= rows if causal else np.ones((S, S), bool)
+    if window is not None:
+        ok &= cols > rows - window
+    s = np.where(ok[None, None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = np.einsum("bkrqs,bskd->bkrqd", p, np.asarray(v, np.float32))
+    return np.transpose(o, (0, 3, 1, 2, 4)).reshape(B, S, H, v.shape[-1])
+
+
+@hypothesis.given(
+    st.integers(1, 3),                       # batch
+    st.sampled_from([4, 6, 16, 33]),         # seq (incl. non-chunk-multiple)
+    st.sampled_from([(4, 2), (4, 4), (2, 1)]),  # (H, Kh)
+    st.booleans(),                           # causal
+    st.sampled_from([None, 3, 8]),           # window
+)
+def test_chunked_attention_matches_naive(B, S, heads, causal, window):
+    H, Kh = heads
+    Dh = 8
+    key = jax.random.PRNGKey(S * 131 + H)
+    q, k, v = (jax.random.normal(kk, (B, S, hh, Dh), jnp.float32)
+               for kk, hh in zip(jax.random.split(key, 3), (H, Kh, Kh)))
+    out = L.chunked_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=8, kv_chunk=8)
+    ref = naive_attention(np.asarray(q), np.asarray(k), np.asarray(v),
+                          causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def naive_ssd(xdt, a_log, Bm, Cm):
+    """Token-by-token linear recurrence (the definitionally-correct form)."""
+    B, S, H, dh = xdt.shape
+    ns = Bm.shape[-1]
+    state = np.zeros((B, H, dh, ns), np.float32)
+    ys = np.zeros_like(np.asarray(xdt))
+    for t in range(S):
+        a = np.exp(np.asarray(a_log[:, t], np.float32))     # (B,H)
+        state = state * a[:, :, None, None] + np.einsum(
+            "bhd,bn->bhdn", np.asarray(xdt[:, t], np.float32),
+            np.asarray(Bm[:, t], np.float32))
+        ys[:, t] = np.einsum("bn,bhdn->bhd", np.asarray(Cm[:, t], np.float32),
+                             state)
+    return ys, state
+
+
+@hypothesis.given(st.integers(1, 2), st.sampled_from([8, 16, 24]),
+                  st.integers(1, 3))
+def test_ssd_chunk_scan_matches_sequential(B, S, H):
+    dh, ns, chunk = 4, 3, 8
+    key = jax.random.PRNGKey(S + 7 * H)
+    ks = jax.random.split(key, 4)
+    xdt = jax.random.normal(ks[0], (B, S, H, dh))
+    a_log = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.5
+    Bm = jax.random.normal(ks[2], (B, S, ns))
+    Cm = jax.random.normal(ks[3], (B, S, ns))
+    y, final = ssm._ssd_chunk_scan(xdt, a_log, Bm, Cm, chunk)
+    y_ref, final_ref = naive_ssd(xdt, a_log, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), final_ref, rtol=1e-4,
+                               atol=1e-4)
+
+
+def naive_wkv(r, k, v, logw, u):
+    B, S, H, dh = np.asarray(r).shape
+    state = np.zeros((B, H, dh, dh), np.float32)
+    ys = np.zeros((B, S, H, dh), np.float32)
+    r, k, v = (np.asarray(a, np.float32) for a in (r, k, v))
+    w = np.exp(np.asarray(logw, np.float32))
+    u = np.asarray(u, np.float32)
+    for t in range(S):
+        kv = np.einsum("bhd,bhe->bhde", k[:, t], v[:, t])
+        ys[:, t] = np.einsum("bhd,bhde->bhe", r[:, t],
+                             state + u[None, :, :, None] * kv)
+        state = state * w[:, t][..., None] + kv
+    return ys, state
+
+
+@hypothesis.given(st.integers(1, 2), st.sampled_from([8, 16, 24]),
+                  st.integers(1, 2))
+def test_wkv_chunk_scan_matches_sequential(B, S, H):
+    dh, chunk = 4, 8
+    key = jax.random.PRNGKey(S * 31 + H)
+    ks = jax.random.split(key, 4)
+    r = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    logw = -jnp.abs(jax.random.normal(ks[3], (B, S, H, dh))) - 0.05
+    u = jnp.full((H, dh), 0.3, jnp.float32)
+    y, final = ssm._wkv_chunk_scan(r, k, v, logw, u, chunk)
+    y_ref, final_ref = naive_wkv(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), final_ref, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_mamba_decode_matches_forward():
+    """Sequential decode equals the chunked forward, token by token."""
+    cfg = get_config("hymba-1.5b", smoke=True)
+    p = ssm.mamba_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    y_full, state_full = ssm.mamba_forward(p, cfg, x, return_state=True)
+    cache = ssm.mamba_cache_init(cfg, B, jnp.float32)
+    ys = []
+    for t in range(S):
+        y_t, cache = ssm.mamba_decode(p, cfg, x[:, t:t + 1], cache)
+        ys.append(y_t)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(cache["state"]),
+                               np.asarray(state_full["state"]),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(cache["conv"]),
+                               np.asarray(state_full["conv"]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_decode_matches_forward():
+    cfg = get_config("rwkv6-3b", smoke=True)
+    p = ssm.rwkv_time_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.3
+    y_full, state_full = ssm.rwkv_time_forward(p, cfg, x, return_state=True)
+    cache = {"state": jnp.zeros_like(state_full["state"]
+                                     if isinstance(state_full, dict)
+                                     else state_full),
+             "x_prev": jnp.zeros((B, 1, cfg.d_model))}
+    cache = {"state": jnp.zeros((B, cfg.n_heads, cfg.d_model // cfg.n_heads,
+                                 cfg.d_model // cfg.n_heads), jnp.float32),
+             "x_prev": jnp.zeros((B, 1, cfg.d_model))}
+    ys = []
+    for t in range(S):
+        y_t, cache = ssm.rwkv_time_decode(p, cfg, x[:, t:t + 1], cache)
+        ys.append(y_t)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
