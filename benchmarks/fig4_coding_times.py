@@ -1,6 +1,6 @@
 """Paper Fig. 4: coding times, single object and 16 concurrent objects.
 
-Two complementary measurements (no real cluster in this container):
+Three complementary measurements (no real cluster in this container):
 
 A. **Real multi-device wall-clock** — a subprocess with 16 XLA host devices
    runs the actual distributed code paths: RapidRAID pipelined chain
@@ -9,7 +9,13 @@ A. **Real multi-device wall-clock** — a subprocess with 16 XLA host devices
    times measure the compute/orchestration path, not network parallelism —
    functional validation + overhead accounting.
 
-B. **Network model** — benchmarks.netsim with the paper's testbed constants
+B. **Real batched multi-object wall-clock** — the measured tentpole: B
+   objects through ``repro.storage.multi.pipelined_encode_many`` (ONE
+   staggered shard_map launch) versus a loop of B single-object
+   ``pipelined_encode`` launches, plus the fused batched pallas kernel
+   versus a loop of B single-object kernel launches.
+
+C. **Network model** — benchmarks.netsim with the paper's testbed constants
    (1 Gbps NICs, 64 MB blocks): the network-dominated regime the paper
    measures. Reproduces the headline claims (~90% single-object reduction,
    ~20% for 16 concurrent objects).
@@ -49,24 +55,74 @@ print(f"RESULT {t_pipe:.4f} {t_cec:.4f} {t_local:.4f}")
 """
 
 
-def real_devices() -> dict:
+def _run_snippet(snippet: str, ndev: int = 16, timeout: int = 900) -> str:
     import os
     import subprocess
     import sys
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(
         os.path.dirname(os.path.abspath(__file__))), "src")
     env.setdefault("JAX_PLATFORMS", "cpu")
-    proc = subprocess.run([sys.executable, "-c", SUBPROC_SNIPPET], env=env,
-                          capture_output=True, text=True, timeout=900)
+    proc = subprocess.run([sys.executable, "-c", snippet], env=env,
+                          capture_output=True, text=True, timeout=timeout)
     if proc.returncode != 0:
         raise RuntimeError(proc.stderr[-2000:])
-    line = [ln for ln in proc.stdout.splitlines()
+    return [ln for ln in proc.stdout.splitlines()
             if ln.startswith("RESULT")][0]
+
+
+def real_devices() -> dict:
+    line = _run_snippet(SUBPROC_SNIPPET)
     t_pipe, t_cec, t_local = map(float, line.split()[1:])
     return {"pipelined_16dev_s": t_pipe, "classical_16dev_s": t_cec,
             "single_node_s": t_local}
+
+
+MULTI_SNIPPET = r"""
+import time
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro.core import gf, rapidraid
+from repro.kernels.gf_encode import ops
+from repro.storage import chain, multi
+
+B_OBJ, NC = 8, 4
+code = rapidraid.make_code(16, 11, l=16, seed=0)
+rng = np.random.default_rng(0)
+objs = rng.integers(0, 1 << 16, size=(B_OBJ, 11, 32768)).astype(np.uint16)
+
+def timed(fn, n=3):
+    fn(); ts = []
+    for _ in range(n):
+        t0 = time.perf_counter(); fn(); ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts)//2]
+
+# staggered multi-chain (one launch) vs loop of single-object launches
+t_loop = timed(lambda: [np.asarray(chain.pipelined_encode(code, o, num_chunks=NC))
+                        for o in objs])
+t_stag = timed(lambda: np.asarray(multi.pipelined_encode_many(
+    code, objs, num_chunks=NC, stagger=1)))
+t_sq = timed(lambda: np.asarray(multi.pipelined_encode_many(
+    code, objs, num_chunks=NC, stagger=NC)))
+
+# fused batched kernel vs loop of single-object kernel launches
+packed = np.asarray(gf.pack_u32(jnp.asarray(objs), 16))
+t_kloop = timed(lambda: [np.asarray(ops.encode_packed(code.G, jnp.asarray(p), 16))
+                         for p in packed])
+t_kbatch = timed(lambda: np.asarray(ops.encode_packed(
+    code.G, jnp.asarray(packed), 16)))
+print(f"RESULT {t_loop:.4f} {t_stag:.4f} {t_sq:.4f} {t_kloop:.4f} {t_kbatch:.4f}")
+"""
+
+
+def real_multi_object() -> dict:
+    line = _run_snippet(MULTI_SNIPPET)
+    t_loop, t_stag, t_sq, t_kloop, t_kbatch = map(float, line.split()[1:])
+    return {"chain_loop8_s": t_loop, "chain_batched_stagger1_s": t_stag,
+            "chain_batched_staggerC_s": t_sq,
+            "kernel_loop8_s": t_kloop, "kernel_batched_s": t_kbatch}
 
 
 def network_model() -> list[dict]:
@@ -91,7 +147,20 @@ def main() -> None:
         emit("fig4_real", {k: round(v, 4) for k, v in r.items()})
     except Exception as e:  # noqa: BLE001
         print(f"  SKIPPED ({e})")
-    print("-- B: network model (1 Gbps, 64 MB blocks, (16,11))")
+    print("-- B: real batched multi-object (8 objects, 16 XLA host devices)")
+    try:
+        m = real_multi_object()
+        for k, v in m.items():
+            print(f"  {k:28s} {v*1e3:9.1f} ms")
+        best = min(m["chain_batched_stagger1_s"], m["chain_batched_staggerC_s"])
+        print(f"  staggered-vs-looped chain speedup: "
+              f"{m['chain_loop8_s'] / best:.2f}x")
+        print(f"  fused-vs-looped kernel speedup:    "
+              f"{m['kernel_loop8_s'] / m['kernel_batched_s']:.2f}x")
+        emit("fig4_multi_real", {k: round(v, 4) for k, v in m.items()})
+    except Exception as e:  # noqa: BLE001
+        print(f"  SKIPPED ({e})")
+    print("-- C: network model (1 Gbps, 64 MB blocks, (16,11))")
     for row in network_model():
         print(f"  {row['objects']:2d} object(s): classical {row['classical_s']:6.2f}s"
               f"  rapidraid {row['rapidraid_s']:6.2f}s"

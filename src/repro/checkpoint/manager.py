@@ -5,6 +5,9 @@ Lifecycle a 1000-node cluster would run (all simulated faithfully here):
   save(step, state)            -> hot tier: 2 replicas over n nodes
                                   (pipelined insertion layout, paper §V)
   archive(step)                -> RapidRAID pipelined migration; 2x -> 1.45x
+  archive_many(steps)          -> batched migration: all steps encoded
+                                  concurrently (staggered multi-chain /
+                                  fused batched kernel, paper §VI)
   restore(step, like)          -> from hot if present, else decode any k of n
   restore_latest(like)         -> newest restorable step (crash recovery)
   manager.store.fail_node(i)   -> simulate node loss; restore still works
@@ -62,12 +65,23 @@ class CheckpointManager:
         return arc.archive_step(self.store, step, self.acfg,
                                 node_speeds=node_speeds)
 
+    def archive_many(self, steps: list[int], node_speeds=None,
+                     stagger: int = 1) -> list[dict]:
+        """Migrate several hot steps in one concurrent batched encode."""
+        return arc.archive_many(self.store, steps, self.acfg,
+                                node_speeds=node_speeds, stagger=stagger)
+
     def _migrate_old(self, node_speeds=None) -> None:
         steps = arc.list_steps(self.store)
+        pending = []
         for s in steps[: -self.ccfg.hot_keep or None]:
             m = arc.get_manifest(self.store, s)
             if m["tier"] == "hot":
-                self.archive(s, node_speeds=node_speeds)
+                pending.append(s)
+        if len(pending) > 1:
+            self.archive_many(pending, node_speeds=node_speeds)
+        elif pending:
+            self.archive(pending[0], node_speeds=node_speeds)
 
     # -- read path ----------------------------------------------------------
 

@@ -1,0 +1,46 @@
+"""JAX version compatibility shims.
+
+The distributed runtime targets the modern API (``jax.shard_map``,
+``lax.pcast``); older jaxlibs (< 0.5) ship the same functionality as
+``jax.experimental.shard_map`` without varying-axes tracking. Everything in
+``repro`` goes through these wrappers so one import site owns the skew.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` when present, else the experimental fallback.
+
+    The fallback disables replication checking: the chain pipelines carry
+    per-device state through ``lax.scan``, which the old checker cannot
+    prove replicated (the modern API expresses this via ``lax.pcast``).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a mesh axis inside shard_map, across jax versions."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    import jax.core as jc
+    frame = jc.axis_frame(axis_name)
+    return frame if isinstance(frame, int) else frame.size
+
+
+def pcast_varying(x, axis_name: str):
+    """Mark ``x`` device-varying along ``axis_name`` under manual sharding.
+
+    No-op on jaxlibs without ``lax.pcast`` (their shard_map does not track
+    varying manual axes, so the cast is unnecessary).
+    """
+    if hasattr(lax, "pcast"):
+        return lax.pcast(x, (axis_name,), to="varying")
+    return x

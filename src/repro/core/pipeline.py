@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import compat
+
 
 def num_ticks(num_chunks: int, n_stages: int) -> int:
     return num_chunks + n_stages - 1
@@ -47,7 +49,7 @@ def software_pipeline(
 
     Returns the final ``out`` after ``num_chunks + n - 1`` ticks.
     """
-    n = lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     perm = chain_perm(n)
 
@@ -62,7 +64,95 @@ def software_pipeline(
         return (wire_next, out), None
 
     # carries are device-varying under shard_map's manual-axes tracking
-    carry0 = jax.tree.map(lambda x: lax.pcast(x, (axis_name,), to="varying"),
+    carry0 = jax.tree.map(lambda x: compat.pcast_varying(x, axis_name),
                           (wire_init, out_init))
     (_, out), _ = lax.scan(tick, carry0, jnp.arange(num_ticks(num_chunks, n)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Staggered multi-chain pipeline (multi-object archival, paper §VI / Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def window_size(num_chunks: int, num_objects: int, stagger: int) -> int:
+    """Max objects simultaneously active on one stage.
+
+    Object b's chunk ch is processed by stage i at tick t = i + b*stagger + ch,
+    so the active objects at (i, t) satisfy 0 <= t - i - b*stagger < num_chunks
+    — at most (num_chunks-1)//stagger + 1 values of b.
+    """
+    return min(num_objects, (num_chunks - 1) // stagger + 1)
+
+
+def num_ticks_many(num_chunks: int, n_stages: int, num_objects: int,
+                   stagger: int) -> int:
+    return num_chunks + n_stages - 1 + (num_objects - 1) * stagger
+
+
+def staggered_pipeline(
+    step_fn: Callable,
+    wire_init: jax.Array,
+    out_init: jax.Array,
+    num_chunks: int,
+    axis_name: str,
+    *,
+    num_objects: int,
+    stagger: int = 1,
+):
+    """Interleave ``num_objects`` chain pipelines over one stage axis.
+
+    Object b runs the ordinary chunk pipeline shifted by ``b * stagger``
+    ticks, so stage i streams object b's chunks while object b+1's are still
+    in flight — ONE SPMD program instead of ``num_objects`` sequential
+    launches. Total ticks: ``num_chunks + n - 1 + (num_objects-1)*stagger``
+    versus ``num_objects * (num_chunks + n - 1)`` for the sequential loop.
+
+    Per-tick work stays constant: at most ``W = window_size(...)`` objects
+    are active on a stage at once, and the wire carries only that W-slot
+    sliding window. The windows align across the chain — stage i+1's window
+    start at tick t+1 equals stage i's at tick t — so a forwarded window
+    lands exactly where the receiver expects it. Slots holding inactive
+    objects carry don't-care values; correctness needs a slot only while its
+    object is active, and then it holds exactly the single-chain wire.
+
+    ``step_fn(wire_b, out_b, b, ch, active) -> (wire_out_b, out_b)`` computes
+    one object's chunk: ``wire_b``/``out_b`` are one object's wire slot and
+    output accumulator, ``b`` the (traced) object index for slicing
+    per-object operands from closed-over arrays. It is vmapped over the
+    window. ``wire_init`` is ONE object's wire (tiled to the window);
+    ``out_init`` has a leading ``num_objects`` axis.
+
+    ``stagger=1`` minimizes total latency (the paper's concurrent-archival
+    win); ``stagger=num_chunks`` degenerates to W=1 — back-to-back chaining
+    with single-object per-tick work.
+    """
+    assert stagger >= 1 and num_objects >= 1
+    n = compat.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    perm = chain_perm(n)
+    W = window_size(num_chunks, num_objects, stagger)
+    total = num_ticks_many(num_chunks, n, num_objects, stagger)
+
+    def tick(carry, t):
+        wire, out = carry                      # wire (W, ...); out (B, ...)
+        # first object that can still be active: ceil((t-i-(nc-1))/stagger)
+        w0 = jnp.clip(-(-(t - idx - (num_chunks - 1)) // stagger),
+                      0, num_objects - W)
+        out_win = lax.dynamic_slice_in_dim(out, w0, W, axis=0)
+        bs = w0 + jnp.arange(W)
+        ch = t - idx - bs * stagger
+        active = (ch >= 0) & (ch < num_chunks)
+        ch_safe = jnp.clip(ch, 0, num_chunks - 1)
+        wire_in = jnp.where(idx == 0, jnp.zeros_like(wire), wire)
+        wire_out, out_win = jax.vmap(step_fn)(wire_in, out_win, bs, ch_safe,
+                                              active)
+        out = lax.dynamic_update_slice_in_dim(out, out_win, w0, axis=0)
+        wire_next = lax.ppermute(wire_out, axis_name, perm)
+        return (wire_next, out), None
+
+    wire0 = jnp.broadcast_to(wire_init[None], (W,) + wire_init.shape)
+    carry0 = jax.tree.map(lambda x: compat.pcast_varying(x, axis_name),
+                          (wire0, out_init))
+    (_, out), _ = lax.scan(tick, carry0, jnp.arange(total))
     return out

@@ -174,36 +174,57 @@ def pipeline_encode_local(code: RapidRAIDCode, data: np.ndarray,
 
     Walks the pipeline schedule tick by tick exactly as the distributed
     runtime does: at tick t node i processes chunk t - i. Returns the codeword
-    blocks and the number of ticks (= num_chunks + n - 1).
+    blocks and the number of ticks (= num_chunks + n - 1). The single-object
+    special case of the staggered multi-chain below.
+    """
+    assert data.shape[0] == code.k
+    out, ticks = pipeline_encode_local_many(code, data[None],
+                                            num_chunks=num_chunks)
+    return out[0], ticks
+
+
+def pipeline_encode_local_many(code: RapidRAIDCode, objects: np.ndarray,
+                               num_chunks: int = 4,
+                               stagger: int = 1) -> tuple[np.ndarray, int]:
+    """Tick-exact simulation of the STAGGERED multi-chain (oracle for
+    repro.storage.multi): object b's chunk schedule is shifted by
+    ``b * stagger`` ticks, so node i streams object b while object b+1 is in
+    flight behind it — the paper's concurrent multi-object archival (§VI).
+
+    objects (B_obj, k, B) words -> ((B_obj, n, B) codewords, ticks) with
+    ticks = num_chunks + n - 1 + (B_obj - 1) * stagger, versus
+    B_obj * (num_chunks + n - 1) for sequentially encoded objects.
     """
     n, k, l = code.n, code.k, code.l
     sched = code.chain
-    B = data.shape[1]
-    assert data.shape == (k, B) and B % num_chunks == 0
+    B_obj, kk, B = objects.shape
+    assert kk == k and B % num_chunks == 0 and stagger >= 1
     S = B // num_chunks
-    out = np.zeros((n, B), dtype=gf.WORD_DTYPE[l])
-    # x_wire[i] = chunk most recently forwarded by node i (to node i+1)
-    x_wire = np.zeros((n, S), dtype=gf.WORD_DTYPE[l])
-    ticks = 0
-    for t in range(num_chunks + n - 1):
-        ticks += 1
+    dt = gf.WORD_DTYPE[l]
+    out = np.zeros((B_obj, n, B), dtype=dt)
+    # x_wire[b, i] = object b's chunk most recently forwarded by node i
+    x_wire = np.zeros((B_obj, n, S), dtype=dt)
+    ticks = num_chunks + n - 1 + (B_obj - 1) * stagger
+    for t in range(ticks):
         new_wire = x_wire.copy()
-        for i in range(n):  # all nodes act concurrently within a tick
-            ch = t - i
-            if not (0 <= ch < num_chunks):
-                continue
-            sl = slice(ch * S, (ch + 1) * S)
-            x_in = x_wire[i - 1] if i > 0 else np.zeros(S, dtype=gf.WORD_DTYPE[l])
-            c = x_in.copy()
-            x_out = x_in.copy()
-            for s in range(sched.max_blocks):
-                if not sched.block_valid[i, s]:
+        for i in range(n):      # all nodes act concurrently within a tick
+            for b in range(B_obj):
+                ch = t - i - b * stagger
+                if not (0 <= ch < num_chunks):
                     continue
-                blk = data[sched.local_blocks[i, s], sl]
-                c ^= gf.gf_mul_np(blk, sched.xi[i, s], l)
-                x_out ^= gf.gf_mul_np(blk, sched.psi[i, s], l)
-            out[i, sl] = c
-            new_wire[i] = x_out
+                sl = slice(ch * S, (ch + 1) * S)
+                x_in = (x_wire[b, i - 1] if i > 0
+                        else np.zeros(S, dtype=dt))
+                c = x_in.copy()
+                x_out = x_in.copy()
+                for s in range(sched.max_blocks):
+                    if not sched.block_valid[i, s]:
+                        continue
+                    blk = objects[b, sched.local_blocks[i, s], sl]
+                    c ^= gf.gf_mul_np(blk, sched.xi[i, s], l)
+                    x_out ^= gf.gf_mul_np(blk, sched.psi[i, s], l)
+                out[b, i, sl] = c
+                new_wire[b, i] = x_out
         x_wire = new_wire
     return out, ticks
 

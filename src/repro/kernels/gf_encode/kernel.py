@@ -17,6 +17,12 @@ Three kernels, all operating on VMEM tiles with explicit BlockSpecs:
   MXU's much higher int8 throughput; see EXPERIMENTS.md §Perf for the
   roofline comparison.
 
+``gf_encode_kernel`` and ``chain_step_kernel`` accept an optional leading
+OBJECT axis (multi-object archival, paper §VI): a (O, ...) input makes the
+object index the leading pallas grid dimension, so ONE fused launch encodes
+O objects and the launch + coefficient-plane overhead is amortized across
+the batch.
+
 On CPU (this container) the kernels run under ``interpret=True``; the
 BlockSpecs below are the real TPU tiling (last dim a multiple of 128 lanes,
 working set sized for ~16 MB VMEM).
@@ -38,7 +44,7 @@ DEFAULT_BLOCK = 512  # uint32 lanes per tile: 2 KiB/row — k=16 rows fit easily
 def _encode_body(x_ref, o_ref, *, M: np.ndarray, l: int):
     rows, k = M.shape
     lsb = jnp.uint32(gf.LSB_MASK[l])
-    x = x_ref[...]  # (k, TB) uint32
+    x = x_ref[0]  # (k, TB) uint32 — this grid cell's object
     acc = [jnp.zeros_like(x[0]) for _ in range(rows)]
     # hoist bit masks: one (x_j >> b) & lsb per (input row, bit-plane)
     for j in range(k):
@@ -51,73 +57,89 @@ def _encode_body(x_ref, o_ref, *, M: np.ndarray, l: int):
                 cst = consts[r][b]
                 if cst:
                     acc[r] = acc[r] ^ (m * jnp.uint32(cst))
-    o_ref[...] = jnp.stack(acc)
+    o_ref[...] = jnp.stack(acc)[None]
 
 
 def gf_encode_kernel(M: np.ndarray, data_packed: jax.Array, l: int,
                      block: int = DEFAULT_BLOCK, interpret: bool = True):
-    """Static-coeff encode: (k, Bp) packed -> (rows, Bp) packed, grid over Bp."""
+    """Static-coeff encode, single object or a batch of objects in ONE launch.
+
+    (k, Bp) packed -> (rows, Bp), or (O, k, Bp) -> (O, rows, Bp) with the
+    object axis as the leading pallas grid dimension — the coefficient
+    constants are baked into the (unrolled) kernel body once and reused for
+    every object, so launch + plane-hoisting overhead is amortized over O.
+    """
     M = np.asarray(M)
     rows, k = M.shape
-    kk, Bp = data_packed.shape
+    single = data_packed.ndim == 2
+    if single:
+        data_packed = data_packed[None]
+    O, kk, Bp = data_packed.shape
     assert kk == k and Bp % block == 0, (data_packed.shape, M.shape, block)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_encode_body, M=M, l=l),
-        grid=(Bp // block,),
-        in_specs=[pl.BlockSpec((k, block), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((rows, block), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((rows, Bp), jnp.uint32),
+        grid=(O, Bp // block),
+        in_specs=[pl.BlockSpec((1, k, block), lambda o, i: (o, 0, i))],
+        out_specs=pl.BlockSpec((1, rows, block), lambda o, i: (o, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((O, rows, Bp), jnp.uint32),
         interpret=interpret,
     )(data_packed)
+    return out[0] if single else out
 
 
 def _chain_step_body(x_ref, local_ref, bpsi_ref, bxi_ref, c_ref, xout_ref,
                      *, l: int, max_b: int):
     lsb = jnp.uint32(gf.LSB_MASK[l])
-    x_in = x_ref[...]          # (1, TB)
+    x_in = x_ref[0]            # (1, TB) — this grid cell's object
     c = x_in
     xo = x_in
     for s in range(max_b):
-        blk = local_ref[s, :][None]  # (1, TB)
+        blk = local_ref[0, s, :][None]  # (1, TB)
         for b in range(l):
             m = (blk >> b) & lsb     # shared between psi and xi paths
             c = c ^ (m * bxi_ref[s, b])
             xo = xo ^ (m * bpsi_ref[s, b])
-    c_ref[...] = c
-    xout_ref[...] = xo
+    c_ref[...] = c[None]
+    xout_ref[...] = xo[None]
 
 
 def chain_step_kernel(x_in: jax.Array, local: jax.Array, bp_psi: jax.Array,
                       bp_xi: jax.Array, l: int, block: int = DEFAULT_BLOCK,
                       interpret: bool = True):
-    """Fused RapidRAID node step on one chunk.
+    """Fused RapidRAID node step on one chunk, for 1 object or a batch.
 
-    x_in (1, C) uint32 wire; local (max_b, C) packed replica blocks;
-    bp_psi/bp_xi (max_b, l) uint32 bit-plane coefficient constants.
-    Returns (c, x_out), each (1, C).
+    Single object: x_in (1, C) uint32 wire, local (max_b, C) packed replica
+    blocks -> (c, x_out) each (1, C). Batched: x_in (O, 1, C), local
+    (O, max_b, C) -> each output (O, 1, C), one fused launch with the object
+    axis on the pallas grid. bp_psi/bp_xi (max_b, l) uint32 bit-plane
+    coefficient constants are shared across objects (same code).
     """
-    max_b, C = local.shape
-    assert x_in.shape == (1, C) and C % block == 0
+    single = local.ndim == 2
+    if single:
+        x_in, local = x_in[None], local[None]
+    O, max_b, C = local.shape
+    assert x_in.shape == (O, 1, C) and C % block == 0
     body = functools.partial(_chain_step_body, l=l, max_b=max_b)
-    return pl.pallas_call(
+    c, xo = pl.pallas_call(
         body,
-        grid=(C // block,),
+        grid=(O, C // block),
         in_specs=[
-            pl.BlockSpec((1, block), lambda i: (0, i)),
-            pl.BlockSpec((max_b, block), lambda i: (0, i)),
-            pl.BlockSpec((max_b, l), lambda i: (0, 0)),  # coeff planes: whole
-            pl.BlockSpec((max_b, l), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1, block), lambda o, i: (o, 0, i)),
+            pl.BlockSpec((1, max_b, block), lambda o, i: (o, 0, i)),
+            pl.BlockSpec((max_b, l), lambda o, i: (0, 0)),  # planes: whole
+            pl.BlockSpec((max_b, l), lambda o, i: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, block), lambda i: (0, i)),
-            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, 1, block), lambda o, i: (o, 0, i)),
+            pl.BlockSpec((1, 1, block), lambda o, i: (o, 0, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((1, C), jnp.uint32),
-            jax.ShapeDtypeStruct((1, C), jnp.uint32),
+            jax.ShapeDtypeStruct((O, 1, C), jnp.uint32),
+            jax.ShapeDtypeStruct((O, 1, C), jnp.uint32),
         ],
         interpret=interpret,
     )(x_in, local, bp_psi, bp_xi)
+    return (c[0], xo[0]) if single else (c, xo)
 
 
 # ---------------------------------------------------------------------------

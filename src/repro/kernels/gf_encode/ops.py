@@ -30,7 +30,8 @@ def _encode_packed_jit(data_packed, M_key, l, block, interpret):
 def encode_packed(M: np.ndarray, data_packed: jax.Array, l: int,
                   block: int = kernel.DEFAULT_BLOCK,
                   interpret: bool | None = None) -> jax.Array:
-    """Packed bit-plane VPU encode. (k, Bp) uint32 -> (rows, Bp) uint32."""
+    """Packed bit-plane VPU encode. (k, Bp) uint32 -> (rows, Bp) uint32, or
+    batched (O, k, Bp) -> (O, rows, Bp) as one fused launch."""
     if interpret is None:
         interpret = _interpret_default()
     M_key = tuple(tuple(int(v) for v in row) for row in np.asarray(M))
@@ -40,7 +41,11 @@ def encode_packed(M: np.ndarray, data_packed: jax.Array, l: int,
 def encode_words(M: np.ndarray, data: jax.Array, l: int,
                  block: int = kernel.DEFAULT_BLOCK,
                  interpret: bool | None = None) -> jax.Array:
-    """Word-level convenience wrapper: packs, encodes, unpacks."""
+    """Word-level convenience wrapper: packs, encodes, unpacks.
+
+    Accepts (k, B) words or a batch (O, k, B) — packing operates on the
+    last axis either way.
+    """
     dp = gf.pack_u32(data, l)
     out = encode_packed(M, dp, l, block=block, interpret=interpret)
     return gf.unpack_u32(out, l)
@@ -66,7 +71,11 @@ def encode_mxu(M: np.ndarray, data: jax.Array, l: int, block: int = 1024,
 def chain_step(x_in: jax.Array, local: jax.Array, bp_psi: jax.Array,
                bp_xi: jax.Array, l: int, block: int = kernel.DEFAULT_BLOCK,
                interpret: bool | None = None):
-    """Fused per-node RapidRAID chunk step (traced coefficients)."""
+    """Fused per-node RapidRAID chunk step (traced coefficients).
+
+    Single object (x_in (1, C), local (max_b, C)) or a batch of objects
+    (x_in (O, 1, C), local (O, max_b, C)) in one launch.
+    """
     if interpret is None:
         interpret = _interpret_default()
     return kernel.chain_step_kernel(x_in, local, bp_psi, bp_xi, l,

@@ -13,6 +13,12 @@ def encode_packed_ref(M: np.ndarray, data_packed: jax.Array, l: int) -> jax.Arra
     return gf.gf_matvec_packed(M, data_packed, l)
 
 
+def encode_packed_many_ref(M: np.ndarray, data_packed: jax.Array,
+                           l: int) -> jax.Array:
+    """Per-object oracle of the batched kernel: (O, k, Bp) -> (O, rows, Bp)."""
+    return jnp.stack([gf.gf_matvec_packed(M, obj, l) for obj in data_packed])
+
+
 def encode_words_ref(M: np.ndarray, data: jax.Array, l: int) -> jax.Array:
     """(rows,k) x (k, B) words -> (rows, B) words (table arithmetic)."""
     return gf.gf_matmul(jnp.asarray(M), data, l)

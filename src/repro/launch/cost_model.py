@@ -77,6 +77,8 @@ class Cost:
 def _cost_of(lowered) -> Cost:
     compiled = lowered.compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jaxlibs: one dict per program
+        ca = ca[0] if ca else {}
     coll = hlo_lib.collective_bytes(compiled.as_text())
     return Cost(float(ca.get("flops", 0.0)),
                 float(ca.get("bytes accessed", 0.0)),

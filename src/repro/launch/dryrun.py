@@ -109,6 +109,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jaxlibs: one dict per program
+        cost = cost[0] if cost else {}
     coll = hlo_lib.collective_bytes(compiled.as_text())
 
     # corrected accounting: XLA counts while bodies once; compose the true
@@ -154,7 +156,11 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             "output_bytes": mem.output_size_in_bytes,
             "temp_bytes": mem.temp_size_in_bytes,
             "alias_bytes": mem.alias_size_in_bytes,
-            "peak_bytes": mem.peak_memory_in_bytes,
+            # older jaxlibs don't expose peak; args+out+temp is the bound
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes",
+                                  mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  + mem.temp_size_in_bytes),
             "total_per_device": mem.argument_size_in_bytes
             + mem.output_size_in_bytes + mem.temp_size_in_bytes
             - mem.alias_size_in_bytes,

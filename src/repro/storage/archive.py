@@ -12,6 +12,10 @@ This is the paper's lifecycle applied to training checkpoints:
    predecessor — ``repro.storage.chain`` over a device chain, or the host
    oracle off-device), each node keeps its coded block c_i, replicas are
    dropped. Storage falls from 2x to n/k (1.45x for (16,11)).
+   **archive_many** batches the migration: B pending steps are encoded
+   concurrently through the staggered multi-chain (``repro.storage.multi``)
+   or, off-device, one fused batched pallas launch — the paper's
+   multi-object archival (§VI).
 3. **restore** — any k live coded blocks reconstruct the object (GF
    Gaussian elimination on the host builds the decode matrix; the matmul
    runs through the same GF path).
@@ -28,10 +32,12 @@ import dataclasses
 import json
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import classical, gf, rapidraid
 from repro.storage import chain as chain_lib
+from repro.storage import multi as multi_lib
 from repro.storage.object_store import NodeStore, digest
 
 MANIFEST = "manifests/{step:08d}.json"
@@ -157,6 +163,84 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
     }
     _put_manifest(store, step, manifest)
     return manifest
+
+
+def _pick_block(Bp: int, preferred: int = 512) -> int:
+    """Largest pallas tile width <= preferred that divides the packed length."""
+    b = preferred
+    while b > 1 and Bp % b:
+        b //= 2
+    return b
+
+
+def archive_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
+                 node_speeds: np.ndarray | None = None,
+                 use_devices: bool | None = None,
+                 stagger: int = 1) -> list[dict]:
+    """Batched migration: archive B hot steps CONCURRENTLY (paper §VI).
+
+    All steps' objects are encoded together — on an n-device mesh via the
+    staggered multi-chain (one shard_map launch interleaving every object's
+    coding chain over the same nodes), off-device via ONE fused batched
+    pallas launch (the object axis rides the kernel grid). Steps whose block
+    lengths differ are grouped so each fused encode sees a rectangular
+    (B, k, block_len) batch. Returns the updated manifests in step order.
+    """
+    from repro.kernels.gf_encode import ops as kernel_ops
+    code = acfg.code()
+    if node_speeds is not None:
+        perm = chain_lib.order_chain(np.asarray(node_speeds), acfg.n, acfg.k)
+    else:
+        perm = np.arange(acfg.n)
+    if use_devices is None:
+        use_devices = len(jax.devices()) >= acfg.n
+
+    manifests: dict[int, dict] = {}
+    groups: dict[int, list[int]] = {}
+    for step in steps:
+        manifest = get_manifest(store, step)
+        assert manifest["tier"] == "hot", f"step {step} already archived"
+        manifests[step] = manifest
+        groups.setdefault(manifest["block_bytes"], []).append(step)
+
+    out: dict[int, dict] = {}
+    for _, grp in groups.items():
+        # blocks are loaded one group at a time (and released after the
+        # group's encode) so peak host memory is one group, not the batch
+        objs_w = np.stack([_words(hot_load(store, s, manifests[s]), acfg.l)
+                           for s in grp])
+        B = objs_w.shape[-1]
+        if use_devices:
+            nc = acfg.num_chunks
+            while nc > 1 and B % (gf.LANES[acfg.l] * nc):
+                nc //= 2
+            coded_w = np.asarray(multi_lib.pipelined_encode_many(
+                code, objs_w, num_chunks=nc, stagger=stagger))
+        else:
+            # one fused batched kernel launch over the whole group
+            Bp = B // gf.LANES[acfg.l]
+            coded_w = np.asarray(kernel_ops.encode_words(
+                code.G, jnp.asarray(objs_w), acfg.l, block=_pick_block(Bp)))
+        for b, step in enumerate(grp):
+            coded = _u8(coded_w[b])
+            for pos in range(acfg.n):
+                store.put(int(perm[pos]), ARC.format(step=step, i=pos),
+                          coded[pos].tobytes())
+            manifest = manifests[step]
+            for node, held in enumerate(manifest["placement"]):
+                for j in held:
+                    store.delete(node, HOT.format(step=step, j=j))
+            manifest = {
+                **manifest, "tier": "archive",
+                "perm": [int(p) for p in perm],
+                "coded_digests": [digest(coded[i].tobytes())
+                                  for i in range(acfg.n)],
+                "orig_digests": manifest["digests"],
+                "batched_with": [int(s) for s in grp],
+            }
+            _put_manifest(store, step, manifest)
+            out[step] = manifest
+    return [out[s] for s in steps]
 
 
 def archive_classical(store: NodeStore, step: int, acfg: ArchiveConfig) -> dict:

@@ -22,7 +22,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import gf
+from repro.core import compat, gf
 from repro.core.classical import ClassicalRSCode
 from repro.core.rapidraid import RapidRAIDCode
 
@@ -74,7 +74,7 @@ def classical_distributed_encode(code: ClassicalRSCode, data,
     local_packed = jax.device_put(
         jnp.asarray(local_packed), NamedSharding(mesh, P(AXIS)))
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         functools.partial(_distributed_shard, code=code),
         mesh=mesh, in_specs=(P(AXIS),), out_specs=P(AXIS)))
     out_packed = fn(local_packed)

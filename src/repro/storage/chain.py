@@ -22,7 +22,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import gf, pipeline
+from repro.core import compat, gf, pipeline
 from repro.core.rapidraid import RapidRAIDCode
 
 AXIS = "chain"
@@ -100,7 +100,7 @@ def make_chain_mesh(n: int) -> Mesh:
 @functools.partial(jax.jit, static_argnames=("code", "num_chunks", "mesh"))
 def _encode_jit(locals_packed, code: RapidRAIDCode, num_chunks: int, mesh: Mesh):
     bp_psi, bp_xi = bitplane_coeff_planes(code)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         functools.partial(_encode_shard, l=code.l, num_chunks=num_chunks),
         mesh=mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS)),
@@ -191,7 +191,7 @@ def pipelined_decode(code: RapidRAIDCode, ids, shards, num_chunks: int = 8,
             jnp.zeros((k, Bp), jnp.uint32), num_chunks, AXIS)
         return out[None]
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         shard_body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
         out_specs=P(AXIS)))
     sharding_ = NamedSharding(mesh, P(AXIS))

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import compat
 from repro.core import pipeline as sched
 
 AXIS = "stage"
@@ -41,7 +42,7 @@ def _stage_body(stage_fn: Callable, n_micro: int):
 
     def body(params, xs):
         params = jax.tree.map(lambda a: a[0], params)
-        n = lax.axis_size(AXIS)
+        n = compat.axis_size(AXIS)
         idx = lax.axis_index(AXIS)
 
         def step_fn(wire_in, out, ch, active):
@@ -75,7 +76,7 @@ def make_pipeline_fn(stage_fn: Callable, mesh: Mesh, n_micro: int):
         B = x.shape[0]
         assert B % n_micro == 0, (B, n_micro)
         xs = x.reshape(n_micro, B // n_micro, *x.shape[1:])
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             _stage_body(stage_fn, n_micro), mesh=mesh,
             in_specs=(P(AXIS), P()), out_specs=P(),
         )

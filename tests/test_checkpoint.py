@@ -1,11 +1,11 @@
 """Checkpoint manager + archival tier: lifecycle, failures, repair,
 property-tested recovery (any <= n-k node losses must restore exactly)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from tests.hypothesis_compat import hypothesis, st
 
 from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
 from repro.storage import archive as arc

@@ -1,12 +1,11 @@
 """Data-pipeline determinism + optimizer unit/property tests."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data import pipeline as data_lib
 from repro.optim import adamw
+from tests.hypothesis_compat import hypothesis, st
 
 hypothesis.settings.register_profile(
     "ci", deadline=None, max_examples=15,

@@ -1,0 +1,227 @@
+"""Batched multi-object archival: fused kernels, staggered chains, archive_many.
+
+Acceptance pin: one fused launch over B=8 objects must match 8 independent
+``rapidraid.encode_np`` calls bit-exactly, the staggered multi-chain must
+round-trip through decode, and ``archive_many`` manifests must restore.
+"""
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gf, pipeline, rapidraid as rr
+from repro.kernels.gf_encode import ops, ref
+from tests.subproc import run_with_devices
+
+
+# ---------------------------------------------------------------------------
+# fused batched pallas kernels == per-object oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("l", [8, 16])
+def test_batched_encode_kernel_b8_matches_encode_np(l):
+    """One fused launch over B=8 objects == 8 independent encode_np calls."""
+    code = rr.make_code(16, 11, l=l, seed=1)
+    rng = np.random.default_rng(0)
+    B_obj, B = 8, 512 * gf.LANES[l]
+    objs = rng.integers(0, 1 << l, size=(B_obj, 11, B)).astype(gf.WORD_DTYPE[l])
+    dp = gf.pack_u32(jnp.asarray(objs), l)
+    got = ops.encode_packed(code.G, dp, l, block=256)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.encode_packed_many_ref(code.G, dp, l)))
+    for b in range(B_obj):
+        np.testing.assert_array_equal(
+            np.asarray(gf.unpack_u32(got[b], l)), rr.encode_np(code, objs[b]))
+    # the single-object entry point is the batched kernel's B=1 slice
+    got1 = ops.encode_packed(code.G, dp[0], l, block=256)
+    np.testing.assert_array_equal(np.asarray(got1), np.asarray(got[0]))
+
+
+@pytest.mark.parametrize("l", [8, 16])
+@pytest.mark.parametrize("max_b", [1, 2])
+def test_batched_chain_step_kernel(l, max_b):
+    rng = np.random.default_rng(3)
+    B_obj, C = 4, 512
+    x_in = rng.integers(0, 2 ** 32, size=(B_obj, 1, C), dtype=np.uint32)
+    lw = rng.integers(0, 1 << l, size=(B_obj, max_b, C * gf.LANES[l])) \
+        .astype(gf.WORD_DTYPE[l])
+    local = np.asarray(gf.pack_u32(jnp.asarray(lw), l))
+    psi = rng.integers(1, 1 << l, size=(max_b,))
+    xi = rng.integers(1, 1 << l, size=(max_b,))
+    bp_psi = np.array([[gf.gf_mul_scalar(int(p), 1 << j, l) for j in range(l)]
+                       for p in psi], dtype=np.uint32)
+    bp_xi = np.array([[gf.gf_mul_scalar(int(x), 1 << j, l) for j in range(l)]
+                      for x in xi], dtype=np.uint32)
+    c, xo = ops.chain_step(jnp.asarray(x_in), jnp.asarray(local),
+                           jnp.asarray(bp_psi), jnp.asarray(bp_xi), l,
+                           block=256)
+    assert c.shape == (B_obj, 1, C) and xo.shape == (B_obj, 1, C)
+    for b in range(B_obj):
+        c_ref, xo_ref = ref.chain_step_ref(
+            jnp.asarray(x_in[b]), jnp.asarray(local[b]), psi, xi, l)
+        np.testing.assert_array_equal(np.asarray(c[b]), np.asarray(c_ref))
+        np.testing.assert_array_equal(np.asarray(xo[b]), np.asarray(xo_ref))
+
+
+# ---------------------------------------------------------------------------
+# staggered schedule math + host oracle
+# ---------------------------------------------------------------------------
+
+
+def test_window_size_bounds():
+    assert pipeline.window_size(4, 8, 1) == 4
+    assert pipeline.window_size(4, 8, 4) == 1      # back-to-back chaining
+    assert pipeline.window_size(4, 2, 1) == 2      # capped by object count
+    assert pipeline.window_size(8, 16, 3) == 3
+
+
+@pytest.mark.parametrize("n,k,chunks,b_obj,stagger", [
+    (8, 4, 4, 3, 1), (8, 4, 4, 3, 4), (6, 4, 3, 5, 2), (16, 11, 8, 4, 1),
+])
+def test_staggered_local_oracle_matches_encode_np(n, k, chunks, b_obj, stagger):
+    l = 16
+    code = rr.make_code(n, k, l=l, seed=5)
+    rng = np.random.default_rng(2)
+    objs = rng.integers(0, 1 << l, size=(b_obj, k, chunks * 6)) \
+        .astype(gf.WORD_DTYPE[l])
+    got, ticks = rr.pipeline_encode_local_many(code, objs, num_chunks=chunks,
+                                               stagger=stagger)
+    assert ticks == chunks + n - 1 + (b_obj - 1) * stagger
+    for b in range(b_obj):
+        np.testing.assert_array_equal(got[b], rr.encode_np(code, objs[b]))
+
+
+# ---------------------------------------------------------------------------
+# distributed staggered multi-chain (subprocess with forced host devices)
+# ---------------------------------------------------------------------------
+
+
+ENCODE_MANY_SNIPPET = """
+import numpy as np, jax
+from repro.core import gf, rapidraid as rr
+from repro.storage import multi
+
+n, k, l, chunks, b_obj, stagger = {n}, {k}, {l}, {chunks}, {b_obj}, {stagger}
+assert len(jax.devices()) == n, jax.devices()
+code = rr.make_code(n, k, l=l, seed=13)
+rng = np.random.default_rng(0)
+B = chunks * gf.LANES[l] * 8
+objs = rng.integers(0, 1 << l, size=(b_obj, k, B)).astype(gf.WORD_DTYPE[l])
+got = np.asarray(multi.pipelined_encode_many(code, objs, num_chunks=chunks,
+                                             stagger=stagger))
+for b in range(b_obj):
+    np.testing.assert_array_equal(got[b], rr.encode_np(code, objs[b]))
+print("OK", got.shape)
+"""
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("n,k,l,chunks,b_obj,stagger", [
+    (8, 4, 8, 4, 3, 1),     # overlapped chains (max interleave)
+    (8, 4, 16, 4, 3, 4),    # stagger = C: back-to-back chaining, W=1
+    (6, 4, 16, 3, 4, 2),    # n < 2k overlapped placement + mid stagger
+])
+def test_staggered_encode_many_matches_oracle(n, k, l, chunks, b_obj, stagger):
+    out = run_with_devices(
+        ENCODE_MANY_SNIPPET.format(n=n, k=k, l=l, chunks=chunks, b_obj=b_obj,
+                                   stagger=stagger), ndev=n)
+    assert "OK" in out
+
+
+DECODE_MANY_SNIPPET = """
+import numpy as np, jax
+from repro.core import gf, rapidraid as rr
+from repro.storage import multi
+
+code = rr.make_code(8, 4, l=16, seed=13)
+rng = np.random.default_rng(3)
+B = gf.LANES[16] * 8 * 4
+objs = rng.integers(0, 1 << 16, size=(3, 4, B)).astype(np.uint16)
+cw = np.stack([rr.encode_np(code, o) for o in objs])
+ids = [0, 2, 3, 6, 7]          # same survivors for every object
+dec = np.asarray(multi.pipelined_decode_many(code, ids, cw[:, ids],
+                                             num_chunks=4))
+np.testing.assert_array_equal(dec, objs)
+print("OK")
+"""
+
+
+@pytest.mark.multidevice
+def test_staggered_decode_many_roundtrip():
+    """Staggered multi-chain decode reconstructs every object exactly."""
+    out = run_with_devices(DECODE_MANY_SNIPPET, ndev=5)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# archive_many: batched migration + manifest round-trip
+# ---------------------------------------------------------------------------
+
+
+def _state(seed: int):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((40, 50)).astype(np.float32),
+            "step": np.int64(seed)}
+
+
+def test_archive_many_manifests_roundtrip():
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+    with tempfile.TemporaryDirectory() as tmp:
+        mgr = CheckpointManager(CheckpointConfig(root=str(tmp), hot_keep=0,
+                                                 archive_old=False))
+        for s in (1, 2, 3):
+            mgr.save(s, _state(s))
+        manifests = mgr.archive_many([1, 2, 3])
+        assert [m["step"] for m in manifests] == [1, 2, 3]
+        for m in manifests:
+            assert m["tier"] == "archive"
+            assert m["batched_with"] == [1, 2, 3]
+        for i in (2, 9, 13):                    # n-k = 5 tolerated; lose 3
+            mgr.store.fail_node(i)
+        for s in (1, 2, 3):
+            r = mgr.restore(s, _state(s))
+            np.testing.assert_array_equal(np.asarray(r["w"]), _state(s)["w"])
+
+
+def test_archive_many_groups_unequal_sizes():
+    """Steps with different block lengths batch within size groups."""
+    from repro.storage import archive as arc
+    from repro.storage import object_store as obj
+    acfg = arc.ArchiveConfig(n=16, k=11, l=16)
+    with tempfile.TemporaryDirectory() as tmp:
+        store = obj.NodeStore(str(tmp), 16)
+        rng = np.random.default_rng(0)
+        sizes = {1: 640, 2: 640, 3: 1280}
+        blocks = {}
+        for s, B in sizes.items():
+            blocks[s] = rng.integers(0, 256, size=(11, B), dtype=np.uint8)
+            m = arc.hot_save(store, s, blocks[s], acfg)
+            m["blob_len"] = blocks[s].size
+            arc._put_manifest(store, s, m)
+        ms = arc.archive_many(store, [1, 2, 3], acfg)
+        assert ms[0]["batched_with"] == [1, 2] and ms[2]["batched_with"] == [3]
+        for s in sizes:
+            np.testing.assert_array_equal(
+                arc.restore_blocks(store, s, acfg), blocks[s])
+
+
+def test_archive_many_straggler_permutation():
+    """node_speeds permutes every batched step's chain consistently."""
+    from repro.storage import archive as arc
+    from repro.storage import object_store as obj
+    acfg = arc.ArchiveConfig(n=16, k=11, l=16)
+    with tempfile.TemporaryDirectory() as tmp:
+        store = obj.NodeStore(str(tmp), 16)
+        rng = np.random.default_rng(1)
+        for s in (7, 8):
+            blocks = rng.integers(0, 256, size=(11, 640), dtype=np.uint8)
+            m = arc.hot_save(store, s, blocks, acfg)
+            m["blob_len"] = blocks.size
+            arc._put_manifest(store, s, m)
+        speeds = np.linspace(1.0, 0.1, 16)
+        ms = arc.archive_many(store, [7, 8], acfg, node_speeds=speeds)
+        assert ms[0]["perm"] == ms[1]["perm"] != list(range(16))
+        for s in (7, 8):
+            arc.restore_blocks(store, s, acfg)  # digests verified inside

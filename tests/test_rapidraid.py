@@ -3,8 +3,8 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core import classical, fault_tolerance as ft, gf, rapidraid as rr
 

@@ -6,8 +6,6 @@ slow-but-obviously-correct references, with hypothesis sweeping shapes.
 """
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +13,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import layers as L
 from repro.models import ssm
+from tests.hypothesis_compat import hypothesis, st
 
 hypothesis.settings.register_profile(
     "ci", deadline=None, max_examples=12,
