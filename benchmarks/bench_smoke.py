@@ -1,0 +1,75 @@
+"""CI benchmark smoke: reduced-size coding + repair runs -> BENCH_pr.json.
+
+Runs the REAL multi-device code paths of fig4 (batched multi-object encode)
+and fig_repair_times (star vs pipelined repair, batched repair) at sizes a
+shared CI core finishes in minutes, plus the deterministic network models,
+and writes one JSON blob the CI uploads as an artifact — the repo's
+perf-trajectory record.
+
+  PYTHONPATH=src python -m benchmarks.bench_smoke [--out BENCH_pr.json]
+
+Absolute numbers from CI runners are noisy; the artifact's value is the
+RATIOS (star/pipelined, loop/batched) and the model rows, which are
+machine-independent.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+from benchmarks import fig4_coding_times as fig4
+from benchmarks import fig_repair_times as figr
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_pr.json")
+    args = ap.parse_args()
+    t0 = time.time()
+    results: dict = {
+        "meta": {
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "machine": platform.machine(),
+            "smoke": True,
+        },
+        "model": {
+            "fig4": fig4.network_model(),
+            "repair": figr.network_model(),
+        },
+        "real": {},
+    }
+    real = results["real"]
+    try:
+        real["encode_multi"] = fig4.real_multi_object(b_obj=4, nwords=4096)
+    except Exception as e:  # noqa: BLE001
+        real["encode_multi"] = {"error": str(e)[:500]}
+    try:
+        real["repair_8_4"] = figr.real_repair(8, 4, n_lost=1, nwords=4096,
+                                              nc=4)
+    except Exception as e:  # noqa: BLE001
+        real["repair_8_4"] = {"error": str(e)[:500]}
+    try:
+        real["repair_batched"] = figr.real_batched(b_obj=4, nwords=2048,
+                                                   nc=4)
+    except Exception as e:  # noqa: BLE001
+        real["repair_batched"] = {"error": str(e)[:500]}
+    results["meta"]["wall_s"] = round(time.time() - t0, 1)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(json.dumps(results, indent=2, sort_keys=True))
+    print(f"wrote {args.out} in {results['meta']['wall_s']}s")
+    # smoke gate: the model must show pipelined repair beating star for
+    # every chain length >= 4, and the real paths must have produced numbers
+    ok = all(r["pipelined_s"] < r["star_s"]
+             for r in results["model"]["repair"] if r["chain_len"] >= 4)
+    ok = ok and "error" not in real["repair_8_4"]
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,8 +22,6 @@ C. **Network model** — benchmarks.netsim with the paper's testbed constants
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import netsim
 from benchmarks.util import emit
 
@@ -37,7 +35,7 @@ from repro.storage import atomic, chain
 
 code = rapidraid.make_code(16, 11, l=16, seed=0)
 rng = np.random.default_rng(0)
-data = rng.integers(0, 1 << 16, size=(11, 262144)).astype(np.uint16)  # 5.8MB
+data = rng.integers(0, 1 << 16, size=(11, {nwords})).astype(np.uint16)
 
 def timed(fn, n=3):
     fn(); ts = []
@@ -51,7 +49,7 @@ cec = classical.make_code(16, 11, l=16)
 t_cec = timed(lambda: np.asarray(atomic.classical_distributed_encode(cec, data)))
 packed = gf.pack_u32(jnp.asarray(data), 16)
 t_local = timed(lambda: np.asarray(atomic.encode_local(code, packed)))
-print(f"RESULT {t_pipe:.4f} {t_cec:.4f} {t_local:.4f}")
+print(f"RESULT {{t_pipe:.4f}} {{t_cec:.4f}} {{t_local:.4f}}")
 """
 
 
@@ -72,8 +70,9 @@ def _run_snippet(snippet: str, ndev: int = 16, timeout: int = 900) -> str:
             if ln.startswith("RESULT")][0]
 
 
-def real_devices() -> dict:
-    line = _run_snippet(SUBPROC_SNIPPET)
+def real_devices(nwords: int = 262144) -> dict:
+    """Default 262144 words = the 5.8 MB object; smaller for CI smoke."""
+    line = _run_snippet(SUBPROC_SNIPPET.format(nwords=nwords))
     t_pipe, t_cec, t_local = map(float, line.split()[1:])
     return {"pipelined_16dev_s": t_pipe, "classical_16dev_s": t_cec,
             "single_node_s": t_local}
@@ -88,10 +87,10 @@ from repro.core import gf, rapidraid
 from repro.kernels.gf_encode import ops
 from repro.storage import chain, multi
 
-B_OBJ, NC = 8, 4
+B_OBJ, NC = {b_obj}, 4
 code = rapidraid.make_code(16, 11, l=16, seed=0)
 rng = np.random.default_rng(0)
-objs = rng.integers(0, 1 << 16, size=(B_OBJ, 11, 32768)).astype(np.uint16)
+objs = rng.integers(0, 1 << 16, size=(B_OBJ, 11, {nwords})).astype(np.uint16)
 
 def timed(fn, n=3):
     fn(); ts = []
@@ -113,12 +112,13 @@ t_kloop = timed(lambda: [np.asarray(ops.encode_packed(code.G, jnp.asarray(p), 16
                          for p in packed])
 t_kbatch = timed(lambda: np.asarray(ops.encode_packed(
     code.G, jnp.asarray(packed), 16)))
-print(f"RESULT {t_loop:.4f} {t_stag:.4f} {t_sq:.4f} {t_kloop:.4f} {t_kbatch:.4f}")
+print(f"RESULT {{t_loop:.4f}} {{t_stag:.4f}} {{t_sq:.4f}} "
+      f"{{t_kloop:.4f}} {{t_kbatch:.4f}}")
 """
 
 
-def real_multi_object() -> dict:
-    line = _run_snippet(MULTI_SNIPPET)
+def real_multi_object(b_obj: int = 8, nwords: int = 32768) -> dict:
+    line = _run_snippet(MULTI_SNIPPET.format(b_obj=b_obj, nwords=nwords))
     t_loop, t_stag, t_sq, t_kloop, t_kbatch = map(float, line.split()[1:])
     return {"chain_loop8_s": t_loop, "chain_batched_stagger1_s": t_stag,
             "chain_batched_staggerC_s": t_sq,

@@ -1,0 +1,163 @@
+"""Repair analogue of Fig. 4: star-topology vs pipelined repair times.
+
+The paper pipelines the *write* path (archival). "Repair Pipelining for
+Erasure-Coded Storage" (Li et al., PAPERS.md) shows the same trick on the
+*read* path: conventional repair is a star — the replacement node pulls k
+whole helper blocks through its one NIC and reconstructs locally, so repair
+of one block costs ~k normal reads. Slicing the reconstruction across the
+helper chain (``repro.storage.repair``) brings it back to roughly one read:
+T = tau_block + (chain length) * tau_chunk.
+
+Three measurements, mirroring fig4:
+
+A. **Network model** — ``benchmarks.netsim`` with the paper's testbed
+   constants, sweeping the helper-chain length: star_repair_time vs
+   pipeline_repair_time. The headline: pipelined repair wins for every
+   chain length, and the star's cost grows linearly with k while the
+   pipeline's stays ~flat.
+B. **Real multi-device wall-clock** — a subprocess with k XLA host devices
+   runs both REAL code paths for (16,11) and (8,4) with up to n-k lost
+   shards: ``repair.star_repair`` (all-gather + one-node reconstruct) vs
+   ``repair.pipelined_repair`` (reverse chain, fused GF inner-product
+   steps). Shared-core caveat as in fig4 part A.
+C. **Real batched repair** — B objects healed by ONE staggered reverse
+   multi-chain launch (``pipelined_repair_many``) vs a loop of B
+   single-object repairs.
+"""
+from __future__ import annotations
+
+from benchmarks import netsim
+from benchmarks.fig4_coding_times import _run_snippet
+from benchmarks.util import emit
+
+REPAIR_SNIPPET = r"""
+import time
+import numpy as np
+import jax
+from repro.core import gf, rapidraid as rr
+from repro.storage import repair as rep
+
+n, k, l, nwords, nc, n_lost = {n}, {k}, {l}, {nwords}, {nc}, {n_lost}
+code = rr.make_code(n, k, l=l, seed=0)
+rng = np.random.default_rng(0)
+data = rng.integers(0, 1 << l, size=(k, nwords)).astype(gf.WORD_DTYPE[l])
+cw = rr.encode_np(code, data)
+missing = list(range(n_lost))
+ids = [i for i in range(n) if i not in missing]
+
+def timed(fn, reps=3):
+    fn(); ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter(); fn(); ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts)//2]
+
+t_star = timed(lambda: np.asarray(rep.star_repair(code, ids, cw[ids], missing)))
+t_pipe = timed(lambda: np.asarray(rep.pipelined_repair(
+    code, ids, cw[ids], missing, num_chunks=nc)))
+np.testing.assert_array_equal(
+    np.asarray(rep.pipelined_repair(code, ids, cw[ids], missing,
+                                    num_chunks=nc)), cw[missing])
+print(f"RESULT {{t_star:.4f}} {{t_pipe:.4f}}")
+"""
+
+BATCH_SNIPPET = r"""
+import time
+import numpy as np
+import jax
+from repro.core import gf, rapidraid as rr
+from repro.storage import repair as rep
+
+n, k, l, nwords, nc, b_obj = {n}, {k}, {l}, {nwords}, {nc}, {b_obj}
+code = rr.make_code(n, k, l=l, seed=0)
+rng = np.random.default_rng(0)
+objs = rng.integers(0, 1 << l, size=(b_obj, k, nwords)).astype(gf.WORD_DTYPE[l])
+cws = np.stack([rr.encode_np(code, o) for o in objs])
+missing = [1]
+ids = [i for i in range(n) if i not in missing]
+
+def timed(fn, reps=3):
+    fn(); ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter(); fn(); ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts)//2]
+
+t_loop = timed(lambda: [np.asarray(rep.pipelined_repair(
+    code, ids, cws[b, ids], missing, num_chunks=nc)) for b in range(b_obj)])
+t_batch = timed(lambda: np.asarray(rep.pipelined_repair_many(
+    code, ids, cws[:, ids], missing, num_chunks=nc, stagger=nc)))
+got = np.asarray(rep.pipelined_repair_many(
+    code, ids, cws[:, ids], missing, num_chunks=nc, stagger=nc))
+np.testing.assert_array_equal(got, cws[:, missing])
+print(f"RESULT {{t_loop:.4f}} {{t_batch:.4f}}")
+"""
+
+
+def network_model(chain_lengths=(2, 3, 4, 6, 8, 11)) -> list[dict]:
+    """Star vs pipelined repair vs a plain read, per helper-chain length."""
+    cfg = netsim.NetConfig()
+    t_read = cfg.block_bytes / (cfg.bw * cfg.duplex / 2)  # one streamed block
+    rows = []
+    for h in chain_lengths:
+        t_star = netsim.star_repair_time(cfg, k=h)
+        t_pipe = netsim.pipeline_repair_time(cfg, k=h)
+        rows.append({
+            "chain_len": h,
+            "star_s": round(t_star, 2),
+            "pipelined_s": round(t_pipe, 2),
+            "normal_read_s": round(t_read, 2),
+            "speedup": round(t_star / t_pipe, 2),
+        })
+    return rows
+
+
+def real_repair(n: int, k: int, n_lost: int, nwords: int = 32768,
+                nc: int = 8) -> dict:
+    line = _run_snippet(
+        REPAIR_SNIPPET.format(n=n, k=k, l=16, nwords=nwords, nc=nc,
+                              n_lost=n_lost), ndev=k)
+    t_star, t_pipe = map(float, line.split()[1:])
+    return {"n": n, "k": k, "lost": n_lost, "star_s": t_star,
+            "pipelined_s": t_pipe}
+
+
+def real_batched(b_obj: int = 8, nwords: int = 8192, nc: int = 4) -> dict:
+    line = _run_snippet(
+        BATCH_SNIPPET.format(n=8, k=4, l=16, nwords=nwords, nc=nc,
+                             b_obj=b_obj), ndev=4)
+    t_loop, t_batch = map(float, line.split()[1:])
+    return {"repair_loop_s": t_loop, "repair_batched_s": t_batch}
+
+
+def main(smoke: bool = False) -> None:
+    print("== Repair times: star vs pipelined ==")
+    print("-- A: network model (1 Gbps, 64 MB blocks), per chain length")
+    for row in network_model():
+        print(f"  chain {row['chain_len']:2d}: star {row['star_s']:6.2f}s"
+              f"  pipelined {row['pipelined_s']:6.2f}s"
+              f"  (read {row['normal_read_s']:.2f}s,"
+              f" {row['speedup']:.1f}x faster)")
+        emit("repair_model", row)
+    nwords = 4096 if smoke else 32768
+    print("-- B: real multi-device wall-clock (k XLA host devices, 1 core)")
+    for n, k, n_lost in ((8, 4, 1), (16, 11, 2), (16, 11, 5)):
+        try:
+            r = real_repair(n, k, n_lost, nwords=nwords)
+            print(f"  ({n},{k}) lose {n_lost}: star {r['star_s']*1e3:8.1f} ms"
+                  f"  pipelined {r['pipelined_s']*1e3:8.1f} ms")
+            emit("repair_real", {key: round(v, 4) if isinstance(v, float)
+                                 else v for key, v in r.items()})
+        except Exception as e:  # noqa: BLE001
+            print(f"  SKIPPED ({e})")
+    print("-- C: real batched repair (8 objects, one staggered launch)")
+    try:
+        m = real_batched(nwords=2048 if smoke else 8192)
+        print(f"  loop of 8 repairs: {m['repair_loop_s']*1e3:8.1f} ms"
+              f"   batched: {m['repair_batched_s']*1e3:8.1f} ms"
+              f"   ({m['repair_loop_s']/m['repair_batched_s']:.2f}x)")
+        emit("repair_batched", {key: round(v, 4) for key, v in m.items()})
+    except Exception as e:  # noqa: BLE001
+        print(f"  SKIPPED ({e})")
+
+
+if __name__ == "__main__":
+    main()

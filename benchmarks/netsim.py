@@ -198,6 +198,37 @@ def pipeline_time(cfg: NetConfig, congested=frozenset(),
     return fill + steady
 
 
+# ---------------------------------------------------------------------------
+# repair: star (conventional degraded repair) vs pipelined helper chain
+# ---------------------------------------------------------------------------
+
+
+def star_repair_time(cfg: NetConfig, congested=frozenset(), k: int = 11,
+                     newcomer: int = 0) -> float:
+    """Conventional single-failure repair: the replacement node pulls k whole
+    helper blocks concurrently through its one NIC, then reconstructs the
+    lost block locally — the read-path twin of classical encode's star
+    (Fig. 1), with the same whole-object buffering before compute."""
+    congested = frozenset(congested)
+    caps = {i: node_cap(cfg, congested, i) for i in range(cfg.n_nodes)}
+    helpers = [i for i in range(cfg.n_nodes) if i != newcomer][:k]
+    flows = [(h, newcomer, j) for j, h in enumerate(helpers)]
+    lat = max(node_lat(cfg, congested, i) for i in helpers + [newcomer])
+    t_enc = (k * cfg.block_bytes / cfg.cec_encode_rate
+             if cfg.cec_encode_rate else 0.0)
+    return _fluid_completion(flows, caps, cfg.block_bytes) + t_enc + lat
+
+
+def pipeline_repair_time(cfg: NetConfig, congested=frozenset(),
+                         order: np.ndarray | None = None,
+                         k: int = 11) -> float:
+    """Repair pipelining (Li et al.): the k helpers and the newcomer form a
+    (k+1)-node chain; each helper fuses its GF term into the partial
+    reconstruction streaming past at chunk granularity, so repair time is a
+    normal read plus a pipeline-fill term — Eq. (2) with n = k + 1 hops."""
+    return pipeline_time(cfg, congested, order=order, n=k + 1, k=k)
+
+
 def eq1_classical(cfg: NetConfig, k: int = 11, m: int = 5) -> float:
     """Paper Eq. (1) best case: tau_block * max(k, m-1), coder NIC-bound;
     the coder holds one block locally."""

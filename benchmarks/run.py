@@ -4,6 +4,7 @@
   fig3_dependencies   Fig. 3    linear dependencies of (n,k) codes
   table2_cpu_cost     Table II  single-node CPU coding cost
   fig4_coding_times   Fig. 4    single/concurrent-object coding times
+  fig_repair_times    (beyond paper) star vs pipelined repair times
   fig5_congestion     Fig. 5    coding times under congestion
   roofline            EXPERIMENTS.md roofline table from dry-run artifacts
 
@@ -16,14 +17,15 @@ import time
 import traceback
 
 from benchmarks import (chain_tuning, fig3_dependencies, fig4_coding_times,
-                        fig5_congestion, roofline, table1_resilience,
-                        table2_cpu_cost)
+                        fig5_congestion, fig_repair_times, roofline,
+                        table1_resilience, table2_cpu_cost)
 
 MODULES = [
     ("table1_resilience", table1_resilience),
     ("fig3_dependencies", fig3_dependencies),
     ("table2_cpu_cost", table2_cpu_cost),
     ("fig4_coding_times", fig4_coding_times),
+    ("fig_repair_times", fig_repair_times),
     ("fig5_congestion", fig5_congestion),
     ("chain_tuning", chain_tuning),
     ("roofline", roofline),

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 from benchmarks.util import emit
 from repro.core import fault_tolerance as ft
-from repro.core import rapidraid
 
 
 def main() -> None:

@@ -10,7 +10,6 @@ on real accelerators).
 Run:  PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
 """
 import argparse
-import dataclasses
 import tempfile
 
 import numpy as np

@@ -11,7 +11,11 @@ Lifecycle a 1000-node cluster would run (all simulated faithfully here):
   restore(step, like)          -> from hot if present, else decode any k of n
   restore_latest(like)         -> newest restorable step (crash recovery)
   manager.store.fail_node(i)   -> simulate node loss; restore still works
-  repair(step)                 -> re-materialize lost coded blocks
+  repair(step)                 -> re-materialize lost coded blocks (targeted
+                                  pipelined repair, digest-verified)
+  repair_many(steps)           -> heal a batch through one staggered launch
+  read_range(step, off, n)     -> serve blob bytes without materializing;
+                                  degraded read when shards are lost
 
 Elasticity: ``restore`` returns host numpy arrays; ``place`` re-shards them
 onto ANY mesh (the new cluster shape after failures), so a job can resume
@@ -103,9 +107,27 @@ class CheckpointManager:
                 continue
         return None, None
 
+    def read_range(self, step: int, offset: int, nbytes: int,
+                   heal: bool = False) -> bytes:
+        """Serve checkpoint-blob bytes [offset, offset+nbytes) without
+        materializing the object — degraded read when shards are lost."""
+        manifest = arc.get_manifest(self.store, step)
+        blob_len = manifest.get("blob_len", manifest["k"] * manifest["block_bytes"])
+        offset = max(0, min(offset, blob_len))   # EOF-probing reads -> b""
+        nbytes = max(0, min(nbytes, blob_len - offset))
+        return arc.read_range(self.store, step, self.acfg, offset, nbytes,
+                              heal=heal)
+
     def repair(self, step: int, replacement_nodes=None) -> list[int]:
         return arc.repair(self.store, step, self.acfg,
                           replacement_nodes=replacement_nodes)
+
+    def repair_many(self, steps: list[int], replacement_nodes=None,
+                    stagger: int = 1) -> list[list[int]]:
+        """Heal several archived steps in one batched (staggered) repair."""
+        return arc.repair_many(self.store, steps, self.acfg,
+                               replacement_nodes=replacement_nodes,
+                               stagger=stagger)
 
     def steps(self) -> list[int]:
         return arc.list_steps(self.store)

@@ -115,6 +115,52 @@ def nines(p_success: float) -> int:
     return int(math.floor(-math.log10(p_fail) + 1e-6))
 
 
+# ---------------------------------------------------------------------------
+# Repair planning (runtime repair / degraded reads, repro.storage.repair)
+# ---------------------------------------------------------------------------
+
+def repair_plan(code, missing: Iterable[int],
+                alive: Iterable[int]) -> tuple[list[int], np.ndarray]:
+    """Helpers and coefficients reconstructing lost codeword rows.
+
+    Picks a decodable k-subset H of the surviving rows (greedy independent
+    rows of G) and returns ``(helpers, R)`` with ``R`` the
+    (len(missing), k) GF matrix satisfying ``R @ c[helpers] = c[missing]``:
+    R = G_missing @ G_H^{-1}. One GF inner product over k helper shards per
+    lost row — no full-object decode.
+
+    Raises ValueError (cleanly, before touching any data) when more than
+    n - k rows are lost, i.e. the survivors are not decodable.
+    """
+    missing = list(missing)
+    alive = list(alive)
+    if set(missing) & set(alive):
+        raise ValueError(f"rows {set(missing) & set(alive)} both missing and alive")
+    G_alive = code.G[alive].astype(np.int64)
+    chosen = rapidraid.independent_rows(G_alive, code.k, code.l)  # ValueError if not
+    helpers = [alive[p] for p in chosen]
+    inv = gf.gf_inv_matrix_np(G_alive[chosen], code.l)            # (k, k)
+    R = gf.gf_matmul_np(code.G[missing], inv, code.l)             # (|missing|, k)
+    return helpers, R
+
+
+def repair_matrix(code, missing: Iterable[int],
+                  alive: Iterable[int]) -> np.ndarray:
+    """(len(missing), len(alive)) R' with R' @ c[alive] = c[missing].
+
+    Columns for survivors outside the chosen helper k-subset are zero —
+    convenient when the caller already holds all surviving shards in
+    ``alive`` order.
+    """
+    missing = list(missing)
+    alive = list(alive)
+    helpers, R = repair_plan(code, missing, alive)
+    out = np.zeros((len(missing), len(alive)), dtype=gf.WORD_DTYPE[code.l])
+    for col, h in enumerate(helpers):
+        out[:, alive.index(h)] = R[:, col]
+    return out
+
+
 def resilience_table(code, probs: Iterable[float] = (0.2, 0.1, 0.01, 0.001)):
     """Reproduce Table I rows for a given RapidRAID code."""
     counts = recoverability_by_size(code.G, code.k, code.l)  # enumerate once

@@ -12,6 +12,11 @@ Semantics (SPMD over a 1-D ``axis_name`` of size n):
   tick t in [0, S + n - 1):  stage i processes chunk ch = t - i when valid,
   receives its predecessor's wire from the previous tick (stage 0 receives
   zeros), and forwards a wire to stage i+1 via ``lax.ppermute``.
+
+The schedule is DIRECTION-AGNOSTIC: with ``reverse=True`` device idx plays
+chain *position* n-1-idx and the wire flows toward device 0 — the repair
+path (``repro.storage.repair``), where the replacement node sits at the
+receiving end of the helper chain, is the encode pipeline run backwards.
 """
 from __future__ import annotations
 
@@ -28,9 +33,20 @@ def num_ticks(num_chunks: int, n_stages: int) -> int:
     return num_chunks + n_stages - 1
 
 
-def chain_perm(n: int) -> list[tuple[int, int]]:
-    """Source→dest pairs for a non-wrapping chain: i -> i+1."""
+def chain_perm(n: int, reverse: bool = False) -> list[tuple[int, int]]:
+    """Source→dest pairs for a non-wrapping chain.
+
+    Forward: device i -> i+1 (encode; the last device finishes the stream).
+    Reverse: device i+1 -> i (repair; device 0 finishes the stream).
+    """
+    if reverse:
+        return [(i + 1, i) for i in range(n - 1)]
     return [(i, i + 1) for i in range(n - 1)]
+
+
+def chain_pos(idx, n: int, reverse: bool = False):
+    """Chain position played by device ``idx`` (traced or static)."""
+    return (n - 1 - idx) if reverse else idx
 
 
 def software_pipeline(
@@ -39,26 +55,33 @@ def software_pipeline(
     out_init,
     num_chunks: int,
     axis_name: str,
+    *,
+    reverse: bool = False,
 ):
     """Run the chain pipeline inside a ``shard_map``-ed function.
 
     ``step_fn(wire_in, out, ch, active) -> (wire_out, out)`` computes one
-    chunk: consumes the predecessor's wire (zeros at stage 0 and at inactive
-    ticks' boundary), updates the output accumulator, and produces the wire to
-    forward. ``out`` may be any pytree.
+    chunk: consumes the predecessor's wire (zeros at the head position and at
+    inactive ticks' boundary), updates the output accumulator, and produces
+    the wire to forward. ``out`` may be any pytree.
 
-    Returns the final ``out`` after ``num_chunks + n - 1`` ticks.
+    ``reverse=False``: device idx is chain position idx, wire flows toward
+    device n-1.  ``reverse=True``: device idx is position n-1-idx, wire flows
+    toward device 0 (the repair direction).  Tick accounting is identical in
+    both directions: ``num_chunks + n - 1`` ticks.
+
+    Returns the final ``out``.
     """
     n = compat.axis_size(axis_name)
-    idx = lax.axis_index(axis_name)
-    perm = chain_perm(n)
+    pos = chain_pos(lax.axis_index(axis_name), n, reverse)
+    perm = chain_perm(n, reverse)
 
     def tick(carry, t):
         wire, out = carry
-        ch = t - idx
+        ch = t - pos
         active = (ch >= 0) & (ch < num_chunks)
         ch_safe = jnp.clip(ch, 0, num_chunks - 1)
-        wire_in = jnp.where(idx == 0, jnp.zeros_like(wire), wire)
+        wire_in = jnp.where(pos == 0, jnp.zeros_like(wire), wire)
         wire_out, out = step_fn(wire_in, out, ch_safe, active)
         wire_next = lax.ppermute(wire_out, axis_name, perm)
         return (wire_next, out), None
@@ -99,6 +122,7 @@ def staggered_pipeline(
     *,
     num_objects: int,
     stagger: int = 1,
+    reverse: bool = False,
 ):
     """Interleave ``num_objects`` chain pipelines over one stage axis.
 
@@ -126,25 +150,29 @@ def staggered_pipeline(
     ``stagger=1`` minimizes total latency (the paper's concurrent-archival
     win); ``stagger=num_chunks`` degenerates to W=1 — back-to-back chaining
     with single-object per-tick work.
+
+    ``reverse=True`` runs every chain in the repair direction (device idx
+    plays position n-1-idx, wire flows toward device 0); the stagger/window
+    algebra is position-based, so it is untouched by the direction.
     """
     assert stagger >= 1 and num_objects >= 1
     n = compat.axis_size(axis_name)
-    idx = lax.axis_index(axis_name)
-    perm = chain_perm(n)
+    pos = chain_pos(lax.axis_index(axis_name), n, reverse)
+    perm = chain_perm(n, reverse)
     W = window_size(num_chunks, num_objects, stagger)
     total = num_ticks_many(num_chunks, n, num_objects, stagger)
 
     def tick(carry, t):
         wire, out = carry                      # wire (W, ...); out (B, ...)
-        # first object that can still be active: ceil((t-i-(nc-1))/stagger)
-        w0 = jnp.clip(-(-(t - idx - (num_chunks - 1)) // stagger),
+        # first object that can still be active: ceil((t-p-(nc-1))/stagger)
+        w0 = jnp.clip(-(-(t - pos - (num_chunks - 1)) // stagger),
                       0, num_objects - W)
         out_win = lax.dynamic_slice_in_dim(out, w0, W, axis=0)
         bs = w0 + jnp.arange(W)
-        ch = t - idx - bs * stagger
+        ch = t - pos - bs * stagger
         active = (ch >= 0) & (ch < num_chunks)
         ch_safe = jnp.clip(ch, 0, num_chunks - 1)
-        wire_in = jnp.where(idx == 0, jnp.zeros_like(wire), wire)
+        wire_in = jnp.where(pos == 0, jnp.zeros_like(wire), wire)
         wire_out, out_win = jax.vmap(step_fn)(wire_in, out_win, bs, ch_safe,
                                               active)
         out = lax.dynamic_update_slice_in_dim(out, out_win, w0, axis=0)

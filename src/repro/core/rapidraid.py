@@ -229,20 +229,36 @@ def pipeline_encode_local_many(code: RapidRAIDCode, objects: np.ndarray,
     return out, ticks
 
 
+def independent_rows(G_sub: np.ndarray, k: int, l: int) -> list[int]:
+    """Greedy positions of k linearly independent rows of ``G_sub``.
+
+    Raises ValueError when rank < k — the clean failure mode shared by
+    decode (``decode_matrix``) and repair planning
+    (``repro.core.fault_tolerance.repair_plan``).
+    """
+    G_sub = np.asarray(G_sub, dtype=np.int64)
+    if gf.gf_rank_np(G_sub, l) < k:
+        raise ValueError(
+            f"only rank {gf.gf_rank_np(G_sub, l)} of the required {k} "
+            f"available — not decodable")
+    chosen: list[int] = []
+    for pos in range(G_sub.shape[0]):
+        trial = chosen + [pos]
+        if gf.gf_rank_np(G_sub[trial], l) == len(trial):
+            chosen.append(pos)
+        if len(chosen) == k:
+            break
+    return chosen
+
+
 def decode_matrix(code: RapidRAIDCode, ids: list[int] | tuple[int, ...]) -> np.ndarray:
     """(k x len(ids)) matrix D with D @ c[ids] = o. Raises if ids are not decodable."""
     ids = list(ids)
     G_sub = code.G[ids].astype(np.int64)
-    if gf.gf_rank_np(G_sub, code.l) < code.k:
-        raise ValueError(f"shard set {ids} is not decodable (rank < k)")
-    # pick k independent rows greedily
-    chosen: list[int] = []
-    for pos in range(len(ids)):
-        trial = chosen + [pos]
-        if gf.gf_rank_np(G_sub[trial], code.l) == len(trial):
-            chosen.append(pos)
-        if len(chosen) == code.k:
-            break
+    try:
+        chosen = independent_rows(G_sub, code.k, code.l)
+    except ValueError as e:
+        raise ValueError(f"shard set {ids} is not decodable: {e}") from None
     inv = gf.gf_inv_matrix_np(G_sub[chosen], code.l)  # (k, k)
     D = np.zeros((code.k, len(ids)), dtype=gf.WORD_DTYPE[code.l])
     D[:, chosen] = inv

@@ -11,6 +11,10 @@ Three kernels, all operating on VMEM tiles with explicit BlockSpecs:
   (xi path) and the forwarded wire (psi path) in one pass over the data —
   the paper's "both phases executed simultaneously" observation (§IV-A).
   Coefficients arrive as a (max_b, l) uint32 plane array (traced, per node).
+* ``repair_step_kernel`` — the repair dual of ``chain_step_kernel``: one
+  helper node's fused GF inner-product contribution to the partial
+  reconstructions of up to n-k lost shards streaming down the helper chain
+  (repair pipelining; ``repro.storage.repair``).
 * ``gf_encode_mxu_kernel`` — beyond-paper variant: lift GF(2^8) to F_2 bit
   matrices; encoding becomes an int8 matmul mod 2 that runs on the MXU
   (the systolic array) instead of the VPU. Trades 64x nominal MACs for the
@@ -140,6 +144,53 @@ def chain_step_kernel(x_in: jax.Array, local: jax.Array, bp_psi: jax.Array,
         interpret=interpret,
     )(x_in, local, bp_psi, bp_xi)
     return (c[0], xo[0]) if single else (c, xo)
+
+
+def _repair_step_body(x_ref, local_ref, bp_ref, o_ref, *, l: int):
+    lsb = jnp.uint32(gf.LSB_MASK[l])
+    acc = x_ref[0]             # (rows, TB) incoming partial reconstructions
+    blk = local_ref[0, 0, :]   # (TB,) this helper's shard chunk
+    for b in range(l):
+        m = (blk >> b) & lsb   # one mask per bit, shared across all rows
+        acc = acc ^ (m[None, :] * bp_ref[:, b][:, None])
+    o_ref[...] = acc[None]
+
+
+def repair_step_kernel(x_in: jax.Array, local: jax.Array, bp: jax.Array,
+                       l: int, block: int = DEFAULT_BLOCK,
+                       interpret: bool = True):
+    """Fused GF inner-product repair step (repair pipelining, one helper).
+
+    The helper adds its term of ``c_lost = xor_h R[:, h] * c_h`` to the
+    partial reconstructions streaming down the chain: ``x_in`` (rows, C)
+    uint32 packed partial sums for the ``rows`` lost shards, ``local``
+    (1, C) the helper's own shard chunk, ``bp`` (rows, l) the bit-plane
+    constants of the helper's repair-coefficient column
+    (``bp[r, b] = R[r, h] * alpha^b``). Returns x_in ^ contribution.
+
+    Batched: x_in (O, rows, C), local (O, 1, C) -> (O, rows, C), one fused
+    launch with the object axis on the pallas grid (``bp`` shared — after a
+    node failure every object archived on the node set lost the same rows).
+    """
+    single = x_in.ndim == 2
+    if single:
+        x_in, local = x_in[None], local[None]
+    O, rows, C = x_in.shape
+    assert local.shape == (O, 1, C) and C % block == 0, (x_in.shape,
+                                                         local.shape, block)
+    out = pl.pallas_call(
+        functools.partial(_repair_step_body, l=l),
+        grid=(O, C // block),
+        in_specs=[
+            pl.BlockSpec((1, rows, block), lambda o, i: (o, 0, i)),
+            pl.BlockSpec((1, 1, block), lambda o, i: (o, 0, i)),
+            pl.BlockSpec((rows, l), lambda o, i: (0, 0)),  # planes: whole
+        ],
+        out_specs=pl.BlockSpec((1, rows, block), lambda o, i: (o, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((O, rows, C), jnp.uint32),
+        interpret=interpret,
+    )(x_in, local, bp)
+    return out[0] if single else out
 
 
 # ---------------------------------------------------------------------------

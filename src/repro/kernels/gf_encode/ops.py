@@ -20,6 +20,14 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def pick_block(Bp: int, preferred: int = kernel.DEFAULT_BLOCK) -> int:
+    """Largest pallas tile width <= preferred that divides the packed length."""
+    b = preferred
+    while b > 1 and Bp % b:
+        b //= 2
+    return b
+
+
 @functools.partial(jax.jit, static_argnames=("M_key", "l", "block", "interpret"))
 def _encode_packed_jit(data_packed, M_key, l, block, interpret):
     M = np.asarray(M_key)
@@ -66,6 +74,21 @@ def encode_mxu(M: np.ndarray, data: jax.Array, l: int, block: int = 1024,
     M_key = tuple(tuple(int(v) for v in row) for row in np.asarray(M))
     out = _encode_mxu_jit(data.astype(jnp.int32), M_key, l, block, interpret)
     return out.astype(gf.WORD_DTYPE[l])
+
+
+def repair_step(x_in: jax.Array, local: jax.Array, bp: jax.Array, l: int,
+                block: int = kernel.DEFAULT_BLOCK,
+                interpret: bool | None = None) -> jax.Array:
+    """Fused GF inner-product repair step (one helper's contribution).
+
+    Single object (x_in (rows, C), local (1, C)) or a batch
+    (x_in (O, rows, C), local (O, 1, C)) in one launch; ``bp`` (rows, l)
+    bit-plane constants of the helper's repair-coefficient column.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return kernel.repair_step_kernel(x_in, local, bp, l, block=block,
+                                     interpret=interpret)
 
 
 def chain_step(x_in: jax.Array, local: jax.Array, bp_psi: jax.Array,

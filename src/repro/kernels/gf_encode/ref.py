@@ -45,6 +45,19 @@ def bitlift_encode_ref(M: np.ndarray, data: jax.Array, l: int) -> jax.Array:
     return word.astype(gf.WORD_DTYPE[l])
 
 
+def repair_step_ref(x_in: jax.Array, local: jax.Array, coeffs: np.ndarray,
+                    l: int) -> jax.Array:
+    """One helper's repair contribution, packed uint32.
+
+    x_in (rows, C) partial reconstructions; local (C,) the helper's shard
+    chunk; coeffs (rows,) the helper's column of the repair matrix R.
+    Returns x_in ^ coeffs[r] * local for every row r.
+    """
+    rows = [x_in[r] ^ gf.gf_mul_const_packed(local[None], int(c), l)[0]
+            for r, c in enumerate(np.asarray(coeffs))]
+    return jnp.stack(rows)
+
+
 def chain_step_ref(x_in: jax.Array, local: jax.Array, psi: np.ndarray,
                    xi: np.ndarray, l: int) -> tuple[jax.Array, jax.Array]:
     """One storage-node chunk step (Eqs. 3-4), packed uint32.

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.data import pipeline as data_lib
 from repro.models import model as model_lib
 from repro.train import steps
 

@@ -29,9 +29,7 @@ import jax
 import numpy as np
 
 from repro.configs import shapes as shapes_lib
-from repro.models import model as model_lib
 from repro.models import transformer as transformer_lib
-from repro.train.sharding import STACKED_TOPS
 
 BF16 = 2
 F32 = 4

@@ -12,11 +12,9 @@ mesh adapts to whatever devices exist). Features exercised here:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

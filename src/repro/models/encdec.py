@@ -14,7 +14,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from repro.hints import hint
 from repro.models import layers as L

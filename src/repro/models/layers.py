@@ -12,7 +12,6 @@ hot spot; see repro.kernels.gf_encode.)
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

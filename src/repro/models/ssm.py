@@ -17,8 +17,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import lax
 
 from repro.models.layers import _scan, dense_init, rmsnorm, rmsnorm_init
 

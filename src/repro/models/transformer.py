@@ -17,7 +17,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.hints import hint
 from repro.models import layers as L

@@ -18,9 +18,16 @@ This is the paper's lifecycle applied to training checkpoints:
    multi-object archival (§VI).
 3. **restore** — any k live coded blocks reconstruct the object (GF
    Gaussian elimination on the host builds the decode matrix; the matmul
-   runs through the same GF path).
-4. **repair** — after node loss, missing c_i are recomputed (decode to o,
-   re-encode row i) and placed on replacement nodes.
+   runs through the same GF path). ``read_range`` serves byte ranges
+   WITHOUT materializing the object: hot-tier slice reads, or a degraded
+   read that decodes only the covering word range of k surviving shards.
+4. **repair** — after node loss, only the missing c_i are recomputed:
+   ``repro.core.fault_tolerance.repair_plan`` picks k helpers and the
+   repair coefficients R with R @ c_helpers = c_missing, and the fused GF
+   kernel (or the reverse pipelined helper chain on a device mesh) applies
+   them — no decode-to-o-and-re-encode. ``repair_many`` heals B objects
+   through ONE staggered launch; ``restore_blocks(heal=True)`` and
+   ``read_range(heal=True)`` heal missing shards detected on the read path.
 
 Straggler mitigation: ``order_chain`` permutes slow nodes to chain ends
 (the paper's Fig. 5 insight); the manifest records the node->codeword-row
@@ -35,9 +42,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classical, gf, rapidraid
+from repro.core import classical, fault_tolerance, gf, rapidraid
 from repro.storage import chain as chain_lib
 from repro.storage import multi as multi_lib
+from repro.storage import repair as repair_lib
 from repro.storage.object_store import NodeStore, digest
 
 MANIFEST = "manifests/{step:08d}.json"
@@ -165,14 +173,6 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
     return manifest
 
 
-def _pick_block(Bp: int, preferred: int = 512) -> int:
-    """Largest pallas tile width <= preferred that divides the packed length."""
-    b = preferred
-    while b > 1 and Bp % b:
-        b //= 2
-    return b
-
-
 def archive_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
                  node_speeds: np.ndarray | None = None,
                  use_devices: bool | None = None,
@@ -220,7 +220,8 @@ def archive_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
             # one fused batched kernel launch over the whole group
             Bp = B // gf.LANES[acfg.l]
             coded_w = np.asarray(kernel_ops.encode_words(
-                code.G, jnp.asarray(objs_w), acfg.l, block=_pick_block(Bp)))
+                code.G, jnp.asarray(objs_w), acfg.l,
+                block=kernel_ops.pick_block(Bp)))
         for b, step in enumerate(grp):
             coded = _u8(coded_w[b])
             for pos in range(acfg.n):
@@ -283,13 +284,22 @@ def _alive_coded(store: NodeStore, step: int, manifest: dict):
                 out.append((pos, raw))
     return out
 
-def restore_blocks(store: NodeStore, step: int,
-                   acfg: ArchiveConfig) -> np.ndarray:
-    """(k, B) uint8 original blocks from whichever tier survives."""
+def restore_blocks(store: NodeStore, step: int, acfg: ArchiveConfig,
+                   heal: bool = False) -> np.ndarray:
+    """(k, B) uint8 original blocks from whichever tier survives.
+
+    ``heal=True``: when the read detects missing coded shards (and the step
+    is still recoverable), re-materialize them via ``repair`` before
+    returning — reads double as scrubs.
+    """
     manifest = get_manifest(store, step)
     if manifest["tier"] == "hot":
         return hot_load(store, step, manifest)
     alive = _alive_coded(store, step, manifest)
+    if heal and manifest["tier"] == "archive" and len(alive) < manifest["n"]:
+        repair(store, step, acfg)
+        manifest = get_manifest(store, step)   # perm may have changed
+        alive = _alive_coded(store, step, manifest)
     if len(alive) < manifest["k"]:
         raise FileNotFoundError(
             f"step {step}: only {len(alive)} of n={manifest['n']} coded "
@@ -317,34 +327,252 @@ def restore_blocks(store: NodeStore, step: int,
     return blocks
 
 
-def repair(store: NodeStore, step: int, acfg: ArchiveConfig,
-           replacement_nodes: dict[int, int] | None = None) -> list[int]:
-    """Recompute lost coded blocks and place them (on replacements if given).
-
-    Returns the list of repaired codeword rows.
-    """
-    manifest = get_manifest(store, step)
-    assert manifest["tier"] == "archive"
-    alive = {pos for pos, _ in _alive_coded(store, step, manifest)}
-    missing = [pos for pos in range(manifest["n"]) if pos not in alive]
-    if not missing:
-        return []
-    blocks = restore_blocks(store, step, acfg)
-    code = rapidraid.RapidRAIDCode(n=manifest["n"], k=manifest["k"],
+def _manifest_code(manifest: dict) -> rapidraid.RapidRAIDCode:
+    return rapidraid.RapidRAIDCode(n=manifest["n"], k=manifest["k"],
                                    l=manifest["l"],
                                    **_coeffs_from_seed(manifest))
-    coded_w = rapidraid.encode_np(code, _words(blocks, manifest["l"]))
-    coded = _u8(coded_w)
+
+
+def _place_repaired(store: NodeStore, step: int, manifest: dict,
+                    missing: list[int], repaired: np.ndarray,
+                    replacement_nodes: dict[int, int] | None) -> None:
+    """Digest-verify ALL repaired rows against the manifest, then place.
+
+    Verification precedes every write, so a miscomputed repair raises
+    ValueError without installing a single block or touching the manifest.
+    """
+    blobs = []
+    for r, pos in enumerate(missing):
+        blob = repaired[r].tobytes()
+        if digest(blob) != manifest["coded_digests"][pos]:
+            raise ValueError(
+                f"repair of codeword row {pos} does not match the archived "
+                f"digest — refusing to install")
+        blobs.append(blob)
     perm = list(manifest["perm"])
-    for pos in missing:
+    for pos, blob in zip(missing, blobs):
         node = perm[pos]
         if replacement_nodes and pos in replacement_nodes:
             node = replacement_nodes[pos]
             perm[pos] = node
-        store.put(node, ARC.format(step=step, i=pos), coded[pos].tobytes())
+        store.put(node, ARC.format(step=step, i=pos), blob)
     manifest["perm"] = perm
     _put_manifest(store, step, manifest)
-    return missing
+
+
+def _repair_state(store: NodeStore, step: int,
+                  manifest: dict) -> tuple[list[int], list[int], list[bytes]]:
+    """(missing, helpers, helper_shards) for one step's repair.
+
+    Liveness is probed by existence (no full-archive hashing); only the k
+    helper shards that fund the reconstruction are read, and each is
+    digest-verified — a corrupt-but-present helper is demoted to missing
+    and the plan recomputed, so corruption is healed, not propagated.
+    Raises ValueError when the survivors are not decodable.
+    """
+    code = _manifest_code(manifest)
+    perm = manifest["perm"]
+    dead = {pos for pos in range(manifest["n"])
+            if not store.has(perm[pos], ARC.format(step=step, i=pos))}
+    raws: dict[int, bytes] = {}
+    while True:
+        missing = sorted(dead)
+        if not missing:
+            return [], [], []
+        alive = [p for p in range(manifest["n"]) if p not in dead]
+        helpers, _ = fault_tolerance.repair_plan(code, missing, alive)
+        for h in helpers:
+            if h not in raws:
+                raws[h] = store.get(perm[h], ARC.format(step=step, i=h))
+        bad = [h for h in helpers
+               if digest(raws[h]) != manifest["coded_digests"][h]]
+        if not bad:
+            return missing, helpers, [raws[h] for h in helpers]
+        dead |= set(bad)
+
+
+def repair(store: NodeStore, step: int, acfg: ArchiveConfig,
+           replacement_nodes: dict[int, int] | None = None,
+           use_devices: bool | None = None) -> list[int]:
+    """Recompute lost coded blocks and place them (on replacements if given).
+
+    Targeted repair: only the missing rows are reconstructed — one GF inner
+    product over k digest-verified helper shards
+    (``fault_tolerance.repair_plan``), run through the reverse pipelined
+    helper chain on a device mesh or the fused repair kernel off-device. No
+    decode-to-object-and-re-encode, and no reads beyond the k helpers.
+    Every repaired row is digest-verified against the manifest BEFORE any
+    placement (a failed repair raises; it never installs a corrupt block).
+
+    Returns the list of repaired codeword rows; raises ValueError when more
+    than n-k rows are lost.
+    """
+    return repair_many(store, [step], acfg,
+                       replacement_nodes=replacement_nodes,
+                       use_devices=use_devices)[0]
+
+
+def repair_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
+                replacement_nodes: dict[int, int] | None = None,
+                use_devices: bool | None = None,
+                stagger: int = 1) -> list[list[int]]:
+    """Heal several archived steps CONCURRENTLY (batched repair).
+
+    After a node failure every object archived on the node set lost the
+    same codeword rows, so the repairs share helpers and coefficients:
+    steps are grouped by (code geometry + seed, block length, missing rows,
+    helper set) and each group runs as ONE staggered reverse-chain launch
+    on a device mesh (B repairs share one ``shard_map`` program) or one
+    fused batched kernel launch off-device. Per step, only the k helper
+    shards are read (digest-verified; corrupt helpers are demoted to
+    missing and repaired too — see ``_repair_state``). Returns the repaired
+    rows per step, in step order.
+    """
+    from repro.kernels.gf_encode import ops as kernel_ops
+    manifests: dict[int, dict] = {}
+    layout: dict[tuple, list[int]] = {}
+    state: dict[int, tuple[list[int], list[int], list[bytes]]] = {}
+    for step in steps:
+        manifest = get_manifest(store, step)
+        assert manifest["tier"] == "archive", f"step {step} not archived"
+        manifests[step] = manifest
+        missing, helpers, raws = _repair_state(store, step, manifest)
+        state[step] = (missing, helpers, raws)
+        # steps only batch when they share the CODE as well as the loss
+        # pattern — a seed/geometry mismatch must not borrow coefficients
+        key = (manifest["block_bytes"], manifest["n"], manifest["k"],
+               manifest["l"], manifest["seed"], tuple(missing),
+               tuple(helpers))
+        layout.setdefault(key, []).append(step)
+
+    out: dict[int, list[int]] = {}
+    for (*_, missing_t, helpers_t), grp in layout.items():
+        missing = list(missing_t)
+        helpers = list(helpers_t)
+        if not missing:
+            for step in grp:
+                out[step] = []
+            continue
+        l = manifests[grp[0]]["l"]
+        k = manifests[grp[0]]["k"]
+        code = _manifest_code(manifests[grp[0]])
+        shards_w = np.stack([
+            _words(np.stack([np.frombuffer(raw, dtype=np.uint8)
+                             for raw in state[s][2]]), l)
+            for s in grp])                          # (B_obj, k, B) helpers
+        if use_devices is None:
+            use_devices_grp = len(jax.devices()) >= k
+        else:
+            use_devices_grp = use_devices
+        if use_devices_grp:
+            nc = acfg.num_chunks
+            while nc > 1 and shards_w.shape[-1] % (gf.LANES[l] * nc):
+                nc //= 2
+            repaired_w = np.asarray(repair_lib.pipelined_repair_many(
+                code, helpers, shards_w, missing, num_chunks=nc,
+                stagger=stagger))
+        else:
+            # helpers is already a greedy-decodable k-set, so the plan over
+            # it returns the same set and an R aligned with its order
+            _, R = fault_tolerance.repair_plan(code, missing, helpers)
+            packed = gf.pack_u32(jnp.asarray(shards_w), l)
+            fused = kernel_ops.encode_packed(
+                R, packed, l, block=kernel_ops.pick_block(packed.shape[-1]))
+            repaired_w = np.asarray(gf.unpack_u32(fused, l))
+        for b, step in enumerate(grp):
+            _place_repaired(store, step, manifests[step], missing,
+                            _u8(repaired_w[b]), replacement_nodes)
+            out[step] = missing
+    return [out[s] for s in steps]
+
+
+# ---------------------------------------------------------------------------
+# degraded reads: byte ranges without materializing the object
+# ---------------------------------------------------------------------------
+
+
+def read_range(store: NodeStore, step: int, acfg: ArchiveConfig,
+               offset: int, nbytes: int, heal: bool = False) -> bytes:
+    """Serve object bytes [offset, offset+nbytes) without full-object decode.
+
+    Hot tier: slice reads straight from a surviving replica. Archive tier:
+    a DEGRADED READ — only the covering word range of k surviving shards is
+    read from disk (``NodeStore.get_range``) and only the touched blocks'
+    rows of the decode matrix are applied, so a small read costs k small
+    reads regardless of how many shards were lost. Slice reads cannot be
+    digest-checked (the manifest pins whole-block digests); ``heal=True``
+    first re-materializes any missing shards (full repair, digest-verified)
+    so subsequent reads run non-degraded.
+
+    Offsets address the padded k*block_bytes object; callers holding a
+    ``blob_len`` manifest entry should clamp (``CheckpointManager.read_range``
+    does).
+    """
+    manifest = get_manifest(store, step)
+    k, B, l = manifest["k"], manifest["block_bytes"], manifest["l"]
+    if nbytes <= 0:
+        return b""
+    end = offset + nbytes
+    assert 0 <= offset and end <= k * B, (offset, nbytes, k * B)
+    j0, j1 = offset // B, (end - 1) // B
+
+    if manifest["tier"] == "hot":
+        out = bytearray()
+        for j in range(j0, j1 + 1):
+            a = max(offset, j * B) - j * B
+            b = min(end, (j + 1) * B) - j * B
+            rel = HOT.format(step=step, j=j)
+            holders = [i for i, held in enumerate(manifest["placement"])
+                       if j in held and store.has(i, rel)]
+            if not holders:
+                raise FileNotFoundError(
+                    f"hot block {j} of step {step} lost on all replicas")
+            out += store.get_range(holders[0], rel, a, b - a)
+        return bytes(out)
+
+    if manifest["tier"] != "archive":
+        # classical tier: fall back to full restore (no RapidRAID decode)
+        blocks = restore_blocks(store, step, acfg)
+        return blocks.reshape(-1)[offset:end].tobytes()
+
+    perm = manifest["perm"]
+    if heal and any(not store.has(perm[pos], ARC.format(step=step, i=pos))
+                    for pos in range(manifest["n"])):
+        # existence probe only — slice reads cannot digest-check, so heal
+        # here targets lost shards; a full scrub is repair()/repair_many()
+        repair(store, step, acfg)
+        manifest = get_manifest(store, step)
+        perm = manifest["perm"]
+    alive_ids = [pos for pos in range(manifest["n"])
+                 if store.has(perm[pos], ARC.format(step=step, i=pos))]
+    code = _manifest_code(manifest)
+    try:
+        chosen = rapidraid.independent_rows(code.G[alive_ids], k, l)
+    except ValueError as e:
+        raise FileNotFoundError(
+            f"step {step}: survivors not decodable ({e})") from None
+    helpers = [alive_ids[p] for p in chosen]
+
+    # per touched block: read ONLY its word-aligned slice of each helper
+    # shard and apply that block's row of the decode matrix
+    # (degraded_read_np's math with D hoisted out of the loop)
+    D = rapidraid.decode_matrix(code, helpers)
+    wb = l // 8
+    dt = gf.WORD_DTYPE[l]
+    out = bytearray()
+    for j in range(j0, j1 + 1):
+        a = max(offset, j * B) - j * B
+        b = min(end, (j + 1) * B) - j * B
+        lo = (a // wb) * wb
+        hi = -(-b // wb) * wb
+        slices_w = np.stack([
+            np.frombuffer(
+                store.get_range(perm[h], ARC.format(step=step, i=h),
+                                lo, hi - lo), dtype=np.uint8).view(dt)
+            for h in helpers])
+        row = _u8(gf.gf_matmul_np(D[[j]], slices_w, l))[0]
+        out += row[a - lo:b - lo].tobytes()
+    return bytes(out)
 
 
 # ---------------------------------------------------------------------------

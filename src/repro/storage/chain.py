@@ -28,6 +28,25 @@ from repro.core.rapidraid import RapidRAIDCode
 AXIS = "chain"
 
 
+def column_bitplanes(M: np.ndarray, l: int) -> np.ndarray:
+    """Per-chain-node bit-plane constants for a GF coefficient matrix.
+
+    (rows, cols) M -> (cols, rows, l) uint32 with
+    ``out[c, r, b] = M[r, c] * alpha^b``: chain node c applies column c of M
+    to its local stream — the layout pipelined decode and pipelined repair
+    ship to the devices.
+    """
+    M = np.asarray(M)
+    rows, cols = M.shape
+    out = np.zeros((cols, rows, l), dtype=np.uint32)
+    for c in range(cols):
+        for r in range(rows):
+            v = int(M[r, c])
+            if v:
+                out[c, r] = gf.bitplane_consts(v, l)
+    return out
+
+
 def bitplane_coeff_planes(code: RapidRAIDCode) -> tuple[np.ndarray, np.ndarray]:
     """(bp_psi, bp_xi), each (n, max_b, l) uint32 with bp[i,s,j] = coef*alpha^j."""
     sched = code.chain
@@ -159,11 +178,7 @@ def pipelined_decode(code: RapidRAIDCode, ids, shards, num_chunks: int = 8,
     mesh = mesh or make_chain_mesh(n_alive)
 
     # per-node bit-plane constants for its column of D: (n_alive, k, l)
-    bp = np.zeros((n_alive, code.k, l), dtype=np.uint32)
-    for i in range(n_alive):
-        for j in range(code.k):
-            for b in range(l):
-                bp[i, j, b] = gf.gf_mul_scalar(int(D[j, i]), 1 << b, l)
+    bp = column_bitplanes(D, l)
 
     shards_packed = np.asarray(gf.pack_u32(jnp.asarray(shards), l))
     Bp = shards_packed.shape[1]

@@ -137,11 +137,7 @@ def pipelined_decode_many(code: RapidRAIDCode, ids, shards,
     mesh = mesh or chain_lib.make_chain_mesh(n_alive)
 
     # per-node bit-plane constants for its column of D: (n_alive, k, l)
-    bp = np.zeros((n_alive, k, l), dtype=np.uint32)
-    for i in range(n_alive):
-        for j in range(k):
-            for b in range(l):
-                bp[i, j, b] = gf.gf_mul_scalar(int(D[j, i]), 1 << b, l)
+    bp = chain_lib.column_bitplanes(D, l)
 
     shards_packed = np.asarray(
         gf.pack_u32(jnp.asarray(shards.reshape(-1, B)), l)

@@ -117,6 +117,16 @@ class NodeStore:
         with open(self.path(i, rel), "rb") as f:
             return f.read()
 
+    def get_range(self, i: int, rel: str, offset: int, nbytes: int) -> bytes:
+        """Read only [offset, offset+nbytes) of an object — the degraded-read
+        primitive: a slice read costs the slice, not the block."""
+        with open(self.path(i, rel), "rb") as f:
+            f.seek(offset)
+            return f.read(nbytes)
+
+    def size(self, i: int, rel: str) -> int:
+        return os.path.getsize(self.path(i, rel))
+
     def has(self, i: int, rel: str) -> bool:
         return os.path.exists(self.path(i, rel))
 

@@ -1,0 +1,261 @@
+"""Pipelined repair & degraded reads over the device chain.
+
+The encode chain run backwards. "Repair Pipelining for Erasure-Coded
+Storage" (Li et al., see PAPERS.md) observes that single-shard repair —
+conventionally a star where the replacement node pulls k whole shards
+through its one NIC — can be sliced exactly like RapidRAID slices encoding:
+the k helpers form a chain, each helper adds its term of
+
+  c_lost = xor_h  R[:, h] * c_h          (R from repro.core.fault_tolerance)
+
+to the partial reconstructions streaming past, and the replacement node at
+the chain's receiving end gets the finished shard at roughly the cost of a
+normal read: T = tau_block + (h-1) * tau_chunk instead of the star's
+k * tau_block through one NIC.
+
+Mapping onto the shared scheduler (``repro.core.pipeline``):
+
+* the helper chain runs the SAME software pipeline as encode but with
+  ``reverse=True`` — device idx plays chain position h-1-idx, the wire flows
+  toward device 0, and device 0 (the replacement node) finishes holding the
+  repaired shard(s);
+* the wire carries one (|missing|, S) chunk of partial reconstructions, so
+  up to n-k lost shards are repaired in ONE pass over the survivors;
+* B concurrent repairs (e.g. every object archived on a failed node) share
+  one ``shard_map`` launch via the staggered multi-chain scheduler.
+
+Degraded reads are the zero-materialization special case: a read of object
+bytes that hit lost blocks decodes ONLY the requested word range — each
+helper contributes its slice, nothing else is read or computed
+(``degraded_read_np`` on the host, ``degraded_read`` through the fused
+pallas kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import compat, fault_tolerance, gf, pipeline, rapidraid
+from repro.core.rapidraid import RapidRAIDCode
+from repro.storage import chain as chain_lib
+
+AXIS = chain_lib.AXIS
+
+
+# ---------------------------------------------------------------------------
+# host oracle
+# ---------------------------------------------------------------------------
+
+
+def repair_np(code: RapidRAIDCode, missing, ids, shards) -> np.ndarray:
+    """Reconstruct lost codeword rows on the host (numpy reference).
+
+    ids: surviving codeword rows; shards (len(ids), B) their blocks.
+    Returns (len(missing), B) — bit-exact rows of ``encode_np``'s output.
+    Raises ValueError when more than n-k rows are missing.
+    """
+    ids = list(ids)
+    shards = np.asarray(shards)
+    helpers, R = fault_tolerance.repair_plan(code, missing, ids)
+    rows = [ids.index(h) for h in helpers]
+    return gf.gf_matmul_np(R, shards[rows], code.l)
+
+
+# ---------------------------------------------------------------------------
+# pipelined repair: helper chain, reverse direction
+# ---------------------------------------------------------------------------
+
+
+def _repair_shard_body(local, bp_node, *, rows, l, num_chunks, reverse=True,
+                       num_objects=None, stagger=1):
+    """Per-device body shared by single and staggered repair."""
+    local = local[0]          # (Bp,) or (B_obj, Bp)
+    planes = bp_node[0]       # (rows, l)
+    Bp = local.shape[-1]
+    S = Bp // num_chunks
+    lsb = jnp.uint32(gf.LSB_MASK[l])
+
+    def contribute(chunk, acc):
+        for b in range(l):
+            m = (chunk >> b) & lsb
+            acc = acc ^ (m[None, :] * planes[:, b][:, None])
+        return acc
+
+    if num_objects is None:
+        def step_fn(wire_in, out, ch, active):
+            chunk = lax.dynamic_slice(local, (ch * S,), (S,))
+            acc = contribute(chunk, wire_in)
+            cur = lax.dynamic_slice(out, (0, ch * S), (rows, S))
+            out = lax.dynamic_update_slice(
+                out, jnp.where(active, acc, cur), (0, ch * S))
+            return acc, out
+
+        return pipeline.software_pipeline(
+            step_fn, jnp.zeros((rows, S), jnp.uint32),
+            jnp.zeros((rows, Bp), jnp.uint32), num_chunks, AXIS,
+            reverse=reverse)
+
+    def step_fn(wire_b, out_b, b, ch, active):
+        chunk = lax.dynamic_slice(local, (b, ch * S), (1, S))[0]
+        acc = contribute(chunk, wire_b)
+        cur = lax.dynamic_slice(out_b, (0, ch * S), (rows, S))
+        out_b = lax.dynamic_update_slice(
+            out_b, jnp.where(active, acc, cur), (0, ch * S))
+        return acc, out_b
+
+    return pipeline.staggered_pipeline(
+        step_fn, jnp.zeros((rows, S), jnp.uint32),
+        jnp.zeros((num_objects, rows, Bp), jnp.uint32), num_chunks, AXIS,
+        num_objects=num_objects, stagger=stagger, reverse=reverse)
+
+
+def pipelined_repair(code: RapidRAIDCode, ids, shards, missing,
+                     num_chunks: int = 8, mesh=None) -> jax.Array:
+    """Repair ≤ n-k lost shards by streaming k survivors through a chain.
+
+    ids: surviving codeword rows; shards (len(ids), B) words. The k chosen
+    helpers form a reverse chain — the wire carries (|missing|, S) partial
+    reconstructions, each helper fuses its GF inner-product contribution
+    in one pass, and DEVICE 0 (the replacement node) finishes holding the
+    repaired (|missing|, B) blocks. Raises ValueError if not decodable.
+    """
+    ids = list(ids)
+    shards = np.asarray(shards)
+    helpers, R = fault_tolerance.repair_plan(code, missing, ids)
+    h = len(helpers)
+    rows = len(list(missing))
+    l = code.l
+    lanes = gf.LANES[l]
+    B = shards.shape[1]
+    assert B % (lanes * num_chunks) == 0, (B, lanes, num_chunks)
+    mesh = mesh or chain_lib.make_chain_mesh(h)
+    bp = chain_lib.column_bitplanes(R, l)                 # (h, rows, l)
+    helper_shards = shards[[ids.index(i) for i in helpers]]
+    shards_packed = np.asarray(gf.pack_u32(jnp.asarray(helper_shards), l))
+
+    def shard_body(local, bp_node):
+        out = _repair_shard_body(local, bp_node, rows=rows, l=l,
+                                 num_chunks=num_chunks)
+        return out[None]
+
+    fn = jax.jit(compat.shard_map(
+        shard_body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
+        out_specs=P(AXIS)))
+    sharding = NamedSharding(mesh, P(AXIS))
+    outs = fn(jax.device_put(jnp.asarray(shards_packed), sharding),
+              jax.device_put(jnp.asarray(bp), sharding))
+    # reverse chain: device 0 plays the LAST position — the replacement node
+    return gf.unpack_u32(outs[0], l)
+
+
+def pipelined_repair_many(code: RapidRAIDCode, ids, shards, missing,
+                          num_chunks: int = 8, stagger: int = 1,
+                          mesh=None) -> jax.Array:
+    """B concurrent repairs through ONE staggered shard_map launch.
+
+    ids/missing are shared across objects (after a node failure, every
+    object archived on that node set lost the same rows). shards
+    (B_obj, len(ids), B) -> repaired (B_obj, |missing|, B), materialized on
+    the replacement node (device 0).
+    """
+    ids = list(ids)
+    shards = np.asarray(shards)
+    B_obj, n_alive, B = shards.shape
+    assert n_alive == len(ids)
+    helpers, R = fault_tolerance.repair_plan(code, missing, ids)
+    h = len(helpers)
+    rows = len(list(missing))
+    l = code.l
+    assert B % (gf.LANES[l] * num_chunks) == 0
+    mesh = mesh or chain_lib.make_chain_mesh(h)
+    bp = chain_lib.column_bitplanes(R, l)
+    helper_shards = shards[:, [ids.index(i) for i in helpers]]
+    shards_packed = np.asarray(
+        gf.pack_u32(jnp.asarray(helper_shards.reshape(-1, B)), l)
+    ).reshape(B_obj, h, -1).transpose(1, 0, 2)            # (h, B_obj, Bp)
+
+    def shard_body(local, bp_node):
+        out = _repair_shard_body(local, bp_node, rows=rows, l=l,
+                                 num_chunks=num_chunks,
+                                 num_objects=B_obj, stagger=stagger)
+        return out[None]
+
+    fn = jax.jit(compat.shard_map(
+        shard_body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
+        out_specs=P(AXIS)))
+    sharding = NamedSharding(mesh, P(AXIS))
+    outs = fn(jax.device_put(jnp.asarray(shards_packed), sharding),
+              jax.device_put(jnp.asarray(bp), sharding))
+    return gf.unpack_u32(outs[0], l)                      # (B_obj, rows, B)
+
+
+# ---------------------------------------------------------------------------
+# star-topology repair baseline (the scheme repair pipelining replaces)
+# ---------------------------------------------------------------------------
+
+
+def star_repair(code: RapidRAIDCode, ids, shards, missing,
+                mesh=None) -> jax.Array:
+    """Star repair: the replacement node gathers k whole helper shards and
+    reconstructs locally — the degraded-read analogue of classical encode
+    (every byte squeezes through one NIC; ``benchmarks/netsim.py`` models
+    the network cost, this runs the real device path for comparison).
+    """
+    ids = list(ids)
+    shards = np.asarray(shards)
+    helpers, R = fault_tolerance.repair_plan(code, missing, ids)
+    h = len(helpers)
+    l = code.l
+    mesh = mesh or chain_lib.make_chain_mesh(h)
+    helper_shards = shards[[ids.index(i) for i in helpers]]
+    shards_packed = np.asarray(gf.pack_u32(jnp.asarray(helper_shards), l))
+
+    def shard_body(local):
+        gathered = lax.all_gather(local[0], AXIS)         # (h, Bp) on everyone
+        return gf.gf_matvec_packed(R, gathered, l)[None]
+
+    fn = jax.jit(compat.shard_map(
+        shard_body, mesh=mesh, in_specs=(P(AXIS),), out_specs=P(AXIS)))
+    sharding = NamedSharding(mesh, P(AXIS))
+    outs = fn(jax.device_put(jnp.asarray(shards_packed), sharding))
+    return gf.unpack_u32(outs[0], l)
+
+
+# ---------------------------------------------------------------------------
+# degraded reads: decode only the requested slice
+# ---------------------------------------------------------------------------
+
+
+def degraded_read_np(code: RapidRAIDCode, ids, shard_slices,
+                     block_ids) -> np.ndarray:
+    """Serve object blocks from coded shards WITHOUT full-object decode.
+
+    ids: surviving codeword rows; shard_slices (len(ids), W) the SAME word
+    range of every surviving shard (only the requested slice is ever read);
+    block_ids: which original blocks the caller wants. Returns
+    (len(block_ids), W) — o_j[w0:w1] = xor_h D[j, h] * c_h[w0:w1], since
+    decode is position-wise over words.
+    """
+    D = rapidraid.decode_matrix(code, list(ids))
+    return gf.gf_matmul_np(D[list(block_ids)], np.asarray(shard_slices),
+                           code.l)
+
+
+def degraded_read(code: RapidRAIDCode, ids, shard_slices, block_ids,
+                  interpret: bool | None = None) -> np.ndarray:
+    """Kernel path of ``degraded_read_np``: one fused pallas launch applies
+    the requested rows of the decode matrix to the packed slices."""
+    from repro.kernels.gf_encode import ops as kernel_ops
+    shard_slices = np.asarray(shard_slices)
+    D = rapidraid.decode_matrix(code, list(ids))[list(block_ids)]
+    W = shard_slices.shape[1]
+    lanes = gf.LANES[code.l]
+    assert W % lanes == 0, (W, lanes)
+    packed = gf.pack_u32(jnp.asarray(shard_slices), code.l)
+    out = kernel_ops.encode_packed(D, packed, code.l,
+                                   block=kernel_ops.pick_block(W // lanes),
+                                   interpret=interpret)
+    return np.asarray(gf.unpack_u32(out, code.l))

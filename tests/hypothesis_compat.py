@@ -62,3 +62,6 @@ except ImportError:  # pragma: no cover - exercised on bare containers
 
     hypothesis = types.SimpleNamespace(
         given=given, settings=settings, strategies=st, HealthCheck=HealthCheck)
+
+__all__ = ["HAVE_HYPOTHESIS", "HealthCheck", "given", "hypothesis",
+           "settings", "st"]

@@ -3,7 +3,6 @@
 whole-program compile, which has no while loops to undercount."""
 import dataclasses
 
-import jax
 import pytest
 
 from repro import hints as hints_lib

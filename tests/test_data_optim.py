@@ -1,5 +1,4 @@
 """Data-pipeline determinism + optimizer unit/property tests."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

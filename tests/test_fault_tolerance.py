@@ -1,5 +1,4 @@
 """Fault tolerance: Table I static resilience, dependency classification."""
-import numpy as np
 import pytest
 
 from repro.core import fault_tolerance as ft, rapidraid as rr

@@ -4,7 +4,6 @@ The chunked formulations (flash attention tiles, SSD chunk scan, WKV6 chunk
 scan) are the performance-critical reformulations; these tests pin them to
 slow-but-obviously-correct references, with hypothesis sweeping shapes.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
