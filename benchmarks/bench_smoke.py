@@ -2,32 +2,112 @@
 
 Runs the REAL multi-device code paths of fig4 (batched multi-object encode)
 and fig_repair_times (star vs pipelined repair, batched repair) at sizes a
-shared CI core finishes in minutes, plus the deterministic network models,
-and writes one JSON blob the CI uploads as an artifact — the repo's
+shared CI core finishes in minutes, plus the deterministic network models
+(fig4, repair, and the fig_hetero scheduler-vs-naive comparison), and
+writes one JSON blob the CI uploads as an artifact — the repo's
 perf-trajectory record.
 
   PYTHONPATH=src python -m benchmarks.bench_smoke [--out BENCH_pr.json]
+                                                  [--baseline BENCH_baseline.json]
 
 Absolute numbers from CI runners are noisy; the artifact's value is the
-RATIOS (star/pipelined, loop/batched) and the model rows, which are
-machine-independent.
+RATIOS (star/pipelined, loop/batched, naive/scheduled), which are
+machine-independent. ``--baseline`` diffs the run against a committed
+reference: any MODEL speedup regressing by more than 30% fails the job
+(the models are deterministic, so a regression is a code change, not
+noise); real-path speedups regressing past the same threshold are printed
+as warnings only, because shared-runner wall clocks jitter beyond any
+useful gate.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import time
 
 import jax
 
 from benchmarks import fig4_coding_times as fig4
+from benchmarks import fig_hetero
 from benchmarks import fig_repair_times as figr
+
+# >30% regression in a pipeline speedup fails the diff
+REGRESSION_TOLERANCE = 0.30
+
+
+def extract_speedups(results: dict) -> dict[str, float]:
+    """The pipeline-speedup ratios the baseline diff gates on.
+
+    Keys prefixed ``model_`` are deterministic (blocking); ``real_`` keys
+    are measured wall-clock ratios (advisory).
+    """
+    sp: dict[str, float] = {}
+    for row in results["model"]["fig4"]:
+        sp[f"model_encode_{row['objects']}obj"] = (
+            row["classical_s"] / row["rapidraid_s"])
+    for row in results["model"]["repair"]:
+        if row["chain_len"] >= 4:
+            sp[f"model_repair_len{row['chain_len']}"] = (
+                row["star_s"] / row["pipelined_s"])
+    for row in results["model"]["hetero"]:
+        sp[f"model_hetero_{row['slow_factor']}x"] = row["speedup"]
+    real = results.get("real", {})
+    enc = real.get("encode_multi", {})
+    if "chain_loop8_s" in enc:
+        best = min(enc["chain_batched_stagger1_s"],
+                   enc["chain_batched_staggerC_s"])
+        sp["real_encode_batched"] = enc["chain_loop8_s"] / best
+        sp["real_kernel_batched"] = (enc["kernel_loop8_s"]
+                                     / enc["kernel_batched_s"])
+    rep = real.get("repair_8_4", {})
+    if "star_s" in rep:
+        sp["real_repair_8_4"] = rep["star_s"] / rep["pipelined_s"]
+    bat = real.get("repair_batched", {})
+    if "repair_loop_s" in bat:
+        sp["real_repair_batched"] = (bat["repair_loop_s"]
+                                     / bat["repair_batched_s"])
+    het = real.get("hetero_forced_slow", {})
+    if "speedup" in het:
+        sp["real_hetero_forced_slow"] = het["speedup"]
+    return {k: round(v, 3) for k, v in sp.items()}
+
+
+def diff_against_baseline(speedups: dict, baseline_path: str) -> list[str]:
+    """Blocking regressions vs the committed baseline (model keys only)."""
+    with open(baseline_path) as f:
+        base = json.load(f).get("speedups", {})
+    failures = []
+    for key, ref in sorted(base.items()):
+        if key not in speedups:
+            # a vanished metric is the worst regression of all — never
+            # let a dropped/renamed model row bypass the gate silently
+            if key.startswith("model_"):
+                failures.append(f"{key}: present in baseline but missing "
+                                f"from this run")
+            else:
+                print(f"WARNING: baseline key {key} missing from this run")
+            continue
+        if ref <= 0:
+            continue
+        cur = speedups[key]
+        if cur < (1.0 - REGRESSION_TOLERANCE) * ref:
+            msg = (f"{key}: speedup {cur:.2f}x vs baseline {ref:.2f}x "
+                   f"(>{int(REGRESSION_TOLERANCE * 100)}% regression)")
+            if key.startswith("model_"):
+                failures.append(msg)
+            else:
+                print(f"WARNING (advisory, noisy real path): {msg}")
+    return failures
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="BENCH_pr.json")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_baseline.json to diff against "
+                         "(fails on >30%% model-speedup regression)")
     args = ap.parse_args()
     t0 = time.time()
     results: dict = {
@@ -40,6 +120,7 @@ def main() -> int:
         "model": {
             "fig4": fig4.network_model(),
             "repair": figr.network_model(),
+            "hetero": fig_hetero.network_model(),
         },
         "real": {},
     }
@@ -58,16 +139,31 @@ def main() -> int:
                                                    nc=4)
     except Exception as e:  # noqa: BLE001
         real["repair_batched"] = {"error": str(e)[:500]}
+    try:
+        real["hetero_forced_slow"] = fig_hetero.real_forced_slow(
+            nwords=1 << 13)
+    except Exception as e:  # noqa: BLE001
+        real["hetero_forced_slow"] = {"error": str(e)[:500]}
+    results["speedups"] = extract_speedups(results)
     results["meta"]["wall_s"] = round(time.time() - t0, 1)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     print(json.dumps(results, indent=2, sort_keys=True))
     print(f"wrote {args.out} in {results['meta']['wall_s']}s")
-    # smoke gate: the model must show pipelined repair beating star for
-    # every chain length >= 4, and the real paths must have produced numbers
+    # smoke gates: the model must show pipelined repair beating star for
+    # every chain length >= 4, the scheduler beating naive placement on the
+    # 4x-slow cluster, and the real paths must have produced numbers
     ok = all(r["pipelined_s"] < r["star_s"]
              for r in results["model"]["repair"] if r["chain_len"] >= 4)
+    ok = ok and all(r["speedup"] >= 1.0 for r in results["model"]["hetero"])
     ok = ok and "error" not in real["repair_8_4"]
+    if args.baseline and os.path.exists(args.baseline):
+        failures = diff_against_baseline(results["speedups"], args.baseline)
+        for msg in failures:
+            print(f"REGRESSION: {msg}")
+        ok = ok and not failures
+    elif args.baseline:
+        print(f"baseline {args.baseline} not found — diff skipped")
     return 0 if ok else 1
 
 

@@ -51,17 +51,46 @@ class NetConfig:
     #                                 cheaper per byte, Table II), so the
     #                                 chain model carries no encode term.
     #                                 None => idealized Eq. (1) CEC.
+    node_bws: tuple[float, ...] | None = None  # heterogeneous clusters:
+    #                                 per-node NIC bandwidth override of
+    #                                 ``bw`` (congestion still wins)
+    compute_rates: tuple[float, ...] | None = None  # per-node chain
+    #                                 GF-combine rate (bytes/s); when set,
+    #                                 pipeline_time charges per-chunk
+    #                                 compute at every position (slow CPUs
+    #                                 throttle the chain like slow links).
+    #                                 None keeps the network-only model.
+    tick_overhead: float = 0.0      # fixed per-chunk-tick cost (message /
+    #                                 dispatch); makes chunk granularity a
+    #                                 real trade-off for the scheduler
+
+
+def hetero_config(slow: dict[int, float], base: NetConfig | None = None,
+                  compute_rate: float = 400e6,
+                  tick_overhead: float = 2e-3) -> NetConfig:
+    """A heterogeneous cluster: nodes in ``slow`` run ``factor`` x slower
+    (NIC and CPU) than the baseline testbed constants."""
+    cfg = base or NetConfig()
+    bws = [cfg.bw / slow.get(i, 1.0) for i in range(cfg.n_nodes)]
+    rates = [compute_rate / slow.get(i, 1.0) for i in range(cfg.n_nodes)]
+    return dataclasses.replace(cfg, node_bws=tuple(bws),
+                               compute_rates=tuple(rates),
+                               tick_overhead=tick_overhead)
 
 
 def node_cap(cfg: NetConfig, congested: frozenset, i: int) -> float:
     """Total NIC capacity pooled over in+out flows."""
     if i in congested:
         return cfg.congested_bw            # shared medium under congestion
-    return cfg.bw * cfg.duplex
+    return node_bw(cfg, congested, i) * cfg.duplex
 
 
 def node_bw(cfg: NetConfig, congested: frozenset, i: int) -> float:
-    return cfg.congested_bw if i in congested else cfg.bw
+    if i in congested:
+        return cfg.congested_bw
+    if cfg.node_bws is not None:
+        return cfg.node_bws[i]
+    return cfg.bw
 
 
 def node_lat(cfg: NetConfig, congested: frozenset, i: int) -> float:
@@ -170,10 +199,23 @@ def classical_time(cfg: NetConfig, congested=frozenset(), coder: int = 0,
 # ---------------------------------------------------------------------------
 
 
+def _position_blocks(n: int, k: int) -> list[int]:
+    """Replica blocks combined at each chain position (RapidRAID placement:
+    ends hold one block, the middle 2k-n positions hold two)."""
+    return [(1 if p < k else 0) + (1 if p >= n - k else 0) for p in range(n)]
+
+
 def pipeline_time(cfg: NetConfig, congested=frozenset(),
                   order: np.ndarray | None = None, n: int = 16, k: int = 11,
                   n_objects: int = 1) -> float:
-    """Chain encode: node order[p] plays chain position p."""
+    """Chain encode: node order[p] plays chain position p.
+
+    With ``cfg.compute_rates`` set, every position also pays its per-chunk
+    GF-combine time (blocks held there / the node's rate) — the
+    heterogeneous-cluster model where a slow CPU throttles the chain the
+    same way a slow link does. ``cfg.tick_overhead`` charges a fixed cost
+    per pipeline tick, making chunk granularity a genuine trade-off.
+    """
     congested = frozenset(congested)
     if order is None:
         order = np.arange(n)
@@ -189,13 +231,29 @@ def pipeline_time(cfg: NetConfig, congested=frozenset(),
     link_rates = [min(nic_share(p), nic_share(p + 1)) for p in range(n - 1)]
     chunk = cfg.chunk_bytes
     n_chunks = cfg.block_bytes / chunk
+    blocks = _position_blocks(n, k)
+
+    def comp_time(pos: int, shared: bool) -> float:
+        if cfg.compute_rates is None:
+            return 0.0
+        rate = cfg.compute_rates[int(order[pos])]
+        if shared:                       # concurrent chains share the CPU too
+            rate /= n_objects
+        return blocks[pos] * chunk / rate
+
     # fill: first chunk traverses the chain while the network is not yet
     # saturated (charge single-object NIC shares even when n_objects > 1)
     fill_rate = [r * n_objects for r in link_rates]
     fill = sum(chunk / r + node_lat(cfg, congested, int(order[p + 1]))
                for p, r in enumerate(fill_rate))
-    steady = (n_chunks - 1) * chunk / min(link_rates)
-    return fill + steady
+    fill += sum(comp_time(p, shared=False) for p in range(n))
+    # steady: the slowest stage (compute + forward) paces every later chunk
+    per_tick = max(comp_time(p, shared=True)
+                   + (chunk / link_rates[p] if p < n - 1 else 0.0)
+                   for p in range(n))
+    steady = (n_chunks - 1) * per_tick
+    overhead = (n_chunks + n - 1) * cfg.tick_overhead
+    return fill + steady + overhead
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,7 @@
   fig4_coding_times   Fig. 4    single/concurrent-object coding times
   fig_repair_times    (beyond paper) star vs pipelined repair times
   fig5_congestion     Fig. 5    coding times under congestion
+  fig_hetero          §V trend  heterogeneous cluster: scheduler vs naive
   roofline            EXPERIMENTS.md roofline table from dry-run artifacts
 
 ``python -m benchmarks.run [--only name]``
@@ -17,8 +18,8 @@ import time
 import traceback
 
 from benchmarks import (chain_tuning, fig3_dependencies, fig4_coding_times,
-                        fig5_congestion, fig_repair_times, roofline,
-                        table1_resilience, table2_cpu_cost)
+                        fig5_congestion, fig_hetero, fig_repair_times,
+                        roofline, table1_resilience, table2_cpu_cost)
 
 MODULES = [
     ("table1_resilience", table1_resilience),
@@ -27,6 +28,7 @@ MODULES = [
     ("fig4_coding_times", fig4_coding_times),
     ("fig_repair_times", fig_repair_times),
     ("fig5_congestion", fig5_congestion),
+    ("fig_hetero", fig_hetero),
     ("chain_tuning", chain_tuning),
     ("roofline", roofline),
 ]

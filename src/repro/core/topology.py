@@ -1,0 +1,209 @@
+"""Cluster topology model for heterogeneity-aware archival scheduling.
+
+The paper's EC2 experiments (§V) show pipelined archival running at the pace
+of the SLOWEST node/link in the chain: Eq. (2)'s T = tau_block + (n-1)
+tau_buf assumes identical nodes, and on a heterogeneous cluster the steady
+state degrades to ``num_chunks * max_hop(tau_hop)``. This module models
+that: per-node GF-combine compute rate, per-node NIC bandwidth, and a
+makespan predictor for an arbitrary chain *placement* (which node plays
+which chain position) at an arbitrary chunk granularity. The scheduler
+(``repro.core.scheduler``) searches placements/chunk counts against this
+model; ``benchmarks/netsim.py`` carries the same per-hop algebra inside its
+max-min-fair fluid simulator, so a schedule chosen here transfers.
+
+Rates are configured (ops config / JSON) or measured: ``measure_compute_rates``
+is a calibration micro-benchmark timing the real packed GF-combine on every
+device.
+
+Chain cost model (mirrors the runtime in ``repro.core.pipeline`` and the
+fluid model in ``benchmarks/netsim.py``):
+
+* chain position p processes ``blocks(p)`` replica blocks per chunk
+  (ends hold 1 block, the middle ``2k-n`` positions hold 2 — RapidRAID's
+  overlapped placement), so per-chunk compute at p is
+  ``blocks(p) * chunk_bytes / compute_rate[node]``;
+* the link p -> p+1 runs at the NIC share of its slower endpoint — interior
+  nodes split their NIC over an in- and an out-flow, chain ends carry one
+  flow (exactly netsim's ``nic_share``);
+* a tick (one chunk through every stage) costs the slowest stage's
+  compute + forward time; the pipeline fill costs the sum along the chain;
+* every tick additionally pays ``tick_overhead`` (per-message/launch cost —
+  the term that makes chunk count a real trade-off: more chunks shrink the
+  fill but pay more per-tick overhead).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Per-node rates of a storage cluster.
+
+    ``compute_rate[i]``: bytes/s node i sustains for the per-chunk GF
+    combine (Eq. 3/4 work). ``nic_bw[i]``: bytes/s total NIC capacity of
+    node i (full-duplex pool; shared by the node's concurrent chain flows).
+    ``hop_latency``: seconds per chain hop (propagation, paid in the fill).
+    ``tick_overhead``: seconds of fixed per-tick cost (message/launch/sync).
+    """
+
+    compute_rate: tuple[float, ...]
+    nic_bw: tuple[float, ...]
+    hop_latency: float = 0.2e-3
+    tick_overhead: float = 0.0
+
+    def __post_init__(self):
+        if len(self.compute_rate) != len(self.nic_bw):
+            raise ValueError(
+                f"compute_rate ({len(self.compute_rate)}) and nic_bw "
+                f"({len(self.nic_bw)}) must describe the same nodes")
+        if any(r <= 0 for r in self.compute_rate + self.nic_bw):
+            raise ValueError("rates must be positive")
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.compute_rate)
+
+    @classmethod
+    def uniform(cls, n: int, compute_rate: float = 400e6,
+                nic_bw: float = 250e6, hop_latency: float = 0.2e-3,
+                tick_overhead: float = 0.0) -> "Topology":
+        return cls(compute_rate=(float(compute_rate),) * n,
+                   nic_bw=(float(nic_bw),) * n,
+                   hop_latency=hop_latency, tick_overhead=tick_overhead)
+
+    def with_slow(self, node: int, factor: float) -> "Topology":
+        """A copy with node ``node`` slowed by ``factor`` (compute and NIC)."""
+        cr = list(self.compute_rate)
+        bw = list(self.nic_bw)
+        cr[node] /= factor
+        bw[node] /= factor
+        return dataclasses.replace(self, compute_rate=tuple(cr),
+                                   nic_bw=tuple(bw))
+
+    def to_dict(self) -> dict:
+        return {"compute_rate": list(self.compute_rate),
+                "nic_bw": list(self.nic_bw),
+                "hop_latency": self.hop_latency,
+                "tick_overhead": self.tick_overhead}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Topology":
+        return cls(compute_rate=tuple(float(v) for v in d["compute_rate"]),
+                   nic_bw=tuple(float(v) for v in d["nic_bw"]),
+                   hop_latency=float(d.get("hop_latency", 0.2e-3)),
+                   tick_overhead=float(d.get("tick_overhead", 0.0)))
+
+
+def position_blocks(n: int, k: int) -> list[int]:
+    """Replica blocks held at each chain position (RapidRAID placement):
+    position p holds block p (p < k) plus block p-(n-k) (p >= n-k)."""
+    if not k <= n <= 2 * k:
+        raise ValueError(f"need k <= n <= 2k, got (n={n}, k={k})")
+    return [(1 if p < k else 0) + (1 if p >= n - k else 0) for p in range(n)]
+
+
+def _nic_share(topo: Topology, order, pos: int, n: int) -> float:
+    """NIC bytes/s available to ONE chain flow at position ``pos``: interior
+    positions split the NIC between their in- and out-flow."""
+    flows = 1 if pos in (0, n - 1) else 2
+    return topo.nic_bw[int(order[pos])] / flows
+
+
+def chain_taus(topo: Topology, order, k: int,
+               chunk_bytes: float) -> tuple[list[float], list[float]]:
+    """(per-position compute seconds, per-link forward seconds) per chunk."""
+    order = list(order)
+    n = len(order)
+    blocks = position_blocks(n, k)
+    t_comp = [blocks[p] * chunk_bytes / topo.compute_rate[int(order[p])]
+              for p in range(n)]
+    t_link = [chunk_bytes / min(_nic_share(topo, order, p, n),
+                                _nic_share(topo, order, p + 1, n))
+              for p in range(n - 1)]
+    return t_comp, t_link
+
+
+def chain_makespan(topo: Topology, order, k: int, block_bytes: float,
+                   num_chunks: int) -> float:
+    """Modeled seconds to archive one object through chain ``order``.
+
+    T = fill + steady + overhead: the first chunk pays every stage in
+    sequence (fill), the remaining ``num_chunks - 1`` chunks drain at the
+    slowest stage's pace (steady — the heterogeneous generalization of
+    Eq. (2)'s tau_buf term), and every one of the ``num_chunks + n - 1``
+    ticks pays the fixed per-tick overhead.
+    """
+    order = list(order)
+    n = len(order)
+    if num_chunks < 1:
+        raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
+    chunk = block_bytes / num_chunks
+    t_comp, t_link = chain_taus(topo, order, k, chunk)
+    fill = sum(t_comp) + sum(t_link) + (n - 1) * topo.hop_latency
+    per_tick = max(t_comp[p] + (t_link[p] if p < n - 1 else 0.0)
+                   for p in range(n))
+    steady = (num_chunks - 1) * per_tick
+    overhead = (num_chunks + n - 1) * topo.tick_overhead
+    return fill + steady + overhead
+
+
+def node_cost(topo: Topology, i: int) -> float:
+    """Per-byte chain cost of node i (compute + wire): the 'slowness' key
+    the scheduler sorts on."""
+    return 1.0 / topo.compute_rate[i] + 1.0 / topo.nic_bw[i]
+
+
+# ---------------------------------------------------------------------------
+# calibration: measure per-device compute rates with the real GF combine
+# ---------------------------------------------------------------------------
+
+
+def measure_compute_rates(l: int = 16, nwords: int = 1 << 15,
+                          iters: int = 3, devices=None) -> list[float]:
+    """Micro-benchmark: bytes/s of the packed GF combine on every device.
+
+    Times ``gf_matvec_packed`` (the same shift/mask/mul/xor inner loop the
+    chain step runs) on each device separately and returns bytes/s per
+    device — the measured ``Topology.compute_rate`` for clusters where the
+    nodes are the local jax devices. On heterogeneous real clusters, run
+    this per host and assemble the Topology from the per-host numbers.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gf
+
+    devices = list(devices if devices is not None else jax.devices())
+    rng = np.random.default_rng(0)
+    coeffs = rng.integers(1, 1 << l, size=(1, 2))
+    data = rng.integers(0, 1 << l,
+                        size=(2, nwords)).astype(gf.WORD_DTYPE[l])
+    packed_host = np.asarray(gf.pack_u32(jnp.asarray(data), l))
+    nbytes = data.nbytes
+
+    fn = jax.jit(lambda xp: gf.gf_matvec_packed(coeffs, xp, l))
+    rates = []
+    for dev in devices:
+        xp = jax.device_put(jnp.asarray(packed_host), dev)
+        jax.block_until_ready(fn(xp))          # compile + warm
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(xp))
+            ts.append(time.perf_counter() - t0)
+        rates.append(nbytes / sorted(ts)[len(ts) // 2])
+    return rates
+
+
+def measured(nic_bw: float = 250e6, l: int = 16, nwords: int = 1 << 15,
+             tick_overhead: float = 0.0) -> Topology:
+    """Topology with calibrated per-device compute rates and a uniform NIC."""
+    rates = measure_compute_rates(l=l, nwords=nwords)
+    return Topology(compute_rate=tuple(rates),
+                    nic_bw=(float(nic_bw),) * len(rates),
+                    tick_overhead=tick_overhead)

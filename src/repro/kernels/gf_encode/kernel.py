@@ -79,7 +79,11 @@ def gf_encode_kernel(M: np.ndarray, data_packed: jax.Array, l: int,
     if single:
         data_packed = data_packed[None]
     O, kk, Bp = data_packed.shape
-    assert kk == k and Bp % block == 0, (data_packed.shape, M.shape, block)
+    if kk != k or Bp % block:
+        raise ValueError(
+            f"gf_encode_kernel: data {data_packed.shape} needs k={k} rows and "
+            f"a packed length divisible by block={block} (pad via "
+            f"repro.kernels.gf_encode.ops.encode_packed for ragged lengths)")
     out = pl.pallas_call(
         functools.partial(_encode_body, M=M, l=l),
         grid=(O, Bp // block),
@@ -240,7 +244,11 @@ def gf_encode_mxu_kernel(M: np.ndarray, data_words: jax.Array, l: int,
     rows, k = M.shape
     Mbits = bitlift_matrix(M, l)
     kk, B = data_words.shape
-    assert kk == k and B % block == 0
+    if kk != k or B % block:
+        raise ValueError(
+            f"gf_encode_mxu_kernel: data {data_words.shape} needs k={k} rows "
+            f"and a word count divisible by block={block} (pad via "
+            f"repro.kernels.gf_encode.ops.encode_mxu for ragged lengths)")
     body = functools.partial(_mxu_body, l=l, rows=rows, k=k)
     return pl.pallas_call(
         body,

@@ -21,28 +21,52 @@ def _interpret_default() -> bool:
 
 
 def pick_block(Bp: int, preferred: int = kernel.DEFAULT_BLOCK) -> int:
-    """Largest pallas tile width <= preferred that divides the packed length."""
-    b = preferred
-    while b > 1 and Bp % b:
-        b //= 2
+    """Pallas tile width for a packed length of ``Bp`` uint32 lanes.
+
+    Returns ``preferred`` for long buffers, or the smallest power of two
+    covering ``Bp`` for short ones. The tile no longer has to divide ``Bp``:
+    the encode wrappers pad ragged buffers to a whole number of tiles and
+    slice the result, so an odd/ragged length never degenerates to
+    ``block=1`` (a per-word pallas grid) the way the old
+    largest-dividing-power-of-two rule did.
+    """
+    if Bp >= preferred:
+        return preferred
+    b = 1
+    while b < Bp:
+        b *= 2
     return b
+
+
+def _pad_tail(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    """Zero-pad the last axis up to a tile multiple (GF-safe: 0 encodes to 0)."""
+    pad = -x.shape[-1] % multiple
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths)
+    return x, pad
 
 
 @functools.partial(jax.jit, static_argnames=("M_key", "l", "block", "interpret"))
 def _encode_packed_jit(data_packed, M_key, l, block, interpret):
     M = np.asarray(M_key)
-    return kernel.gf_encode_kernel(M, data_packed, l, block=block,
-                                   interpret=interpret)
+    Bp = data_packed.shape[-1]
+    data_packed, pad = _pad_tail(data_packed, block)
+    out = kernel.gf_encode_kernel(M, data_packed, l, block=block,
+                                  interpret=interpret)
+    return out[..., :Bp] if pad else out
 
 
 def encode_packed(M: np.ndarray, data_packed: jax.Array, l: int,
                   block: int = kernel.DEFAULT_BLOCK,
                   interpret: bool | None = None) -> jax.Array:
     """Packed bit-plane VPU encode. (k, Bp) uint32 -> (rows, Bp) uint32, or
-    batched (O, k, Bp) -> (O, rows, Bp) as one fused launch."""
+    batched (O, k, Bp) -> (O, rows, Bp) as one fused launch. Ragged lengths
+    are padded to a whole number of tiles and sliced back."""
     if interpret is None:
         interpret = _interpret_default()
     M_key = tuple(tuple(int(v) for v in row) for row in np.asarray(M))
+    block = pick_block(data_packed.shape[-1], block)
     return _encode_packed_jit(data_packed, M_key, l, block, interpret)
 
 
@@ -62,16 +86,24 @@ def encode_words(M: np.ndarray, data: jax.Array, l: int,
 @functools.partial(jax.jit, static_argnames=("M_key", "l", "block", "interpret"))
 def _encode_mxu_jit(data_words, M_key, l, block, interpret):
     M = np.asarray(M_key)
-    return kernel.gf_encode_mxu_kernel(M, data_words, l, block=block,
-                                       interpret=interpret)
+    B = data_words.shape[-1]
+    data_words, pad = _pad_tail(data_words, block)
+    out = kernel.gf_encode_mxu_kernel(M, data_words, l, block=block,
+                                      interpret=interpret)
+    return out[..., :B] if pad else out
 
 
 def encode_mxu(M: np.ndarray, data: jax.Array, l: int, block: int = 1024,
                interpret: bool | None = None) -> jax.Array:
-    """Bit-lifted MXU encode. (k, B) words -> (rows, B) words."""
+    """Bit-lifted MXU encode. (k, B) words -> (rows, B) words.
+
+    Word counts that do not divide ``block`` are zero-padded to a whole
+    number of tiles and sliced back (same pad-and-slice as the VPU path).
+    """
     if interpret is None:
         interpret = _interpret_default()
     M_key = tuple(tuple(int(v) for v in row) for row in np.asarray(M))
+    block = pick_block(data.shape[-1], block)
     out = _encode_mxu_jit(data.astype(jnp.int32), M_key, l, block, interpret)
     return out.astype(gf.WORD_DTYPE[l])
 

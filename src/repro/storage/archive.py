@@ -124,32 +124,81 @@ def hot_load(store: NodeStore, step: int, manifest: dict) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _plan_placement(acfg: ArchiveConfig, block_bytes: int, topology,
+                    node_speeds) -> tuple[np.ndarray, int, dict | None]:
+    """(perm, num_chunks, sched-manifest-entry) for one archival chain.
+
+    ``topology`` (a ``repro.core.topology.Topology``) engages the
+    heterogeneity-aware scheduler: chain ordering + chunk count minimizing
+    the modeled makespan, with the plan recorded in the manifest so decode
+    and repair replay the same placement. ``node_speeds`` keeps the older
+    slow-nodes-to-the-ends heuristic. Neither -> in-order placement.
+    """
+    if topology is not None:
+        from repro.core import scheduler, topology as topo_lib
+        if topology.n_nodes < acfg.n:
+            raise ValueError(
+                f"chain needs {acfg.n} nodes, topology has {topology.n_nodes}")
+        nodes = None
+        if topology.n_nodes > acfg.n:  # pick the n cheapest nodes
+            nodes = sorted(range(topology.n_nodes),
+                           key=lambda i: topo_lib.node_cost(topology, i)
+                           )[: acfg.n]
+        plan = scheduler.plan_chain(topology, acfg.k, float(block_bytes),
+                                    nodes=nodes)
+        return (np.asarray(plan.order), plan.num_chunks,
+                {**plan.to_manifest(), "topology": topology.to_dict()})
+    if node_speeds is not None:
+        perm = chain_lib.order_chain(np.asarray(node_speeds), acfg.n, acfg.k)
+        return perm, acfg.num_chunks, None
+    return np.arange(acfg.n), acfg.num_chunks, None
+
+
+def _device_order(perm: np.ndarray, scheduled: bool) -> list[int] | None:
+    """Scheduler placement for the device chain, when the devices can play
+    it (entries must name distinct local devices)."""
+    order = [int(p) for p in perm]
+    if (scheduled and len(set(order)) == len(order)
+            and max(order) < len(jax.devices())):
+        return order
+    return None
+
+
 def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
                  node_speeds: np.ndarray | None = None,
-                 use_devices: bool | None = None) -> dict:
-    """Migrate step's hot replicas to RapidRAID coded blocks; drop hot."""
+                 use_devices: bool | None = None,
+                 topology=None) -> dict:
+    """Migrate step's hot replicas to RapidRAID coded blocks; drop hot.
+
+    ``topology`` engages the heterogeneity-aware scheduler
+    (``repro.core.scheduler``): chain placement + chunk count chosen against
+    the topology's makespan model and recorded in the manifest
+    (``perm`` / ``sched``), so repair and decode reuse the placement.
+    """
     manifest = get_manifest(store, step)
-    assert manifest["tier"] == "hot", f"step {step} already archived"
+    if manifest["tier"] != "hot":
+        raise ValueError(f"step {step} already archived")
     blocks = hot_load(store, step, manifest)
     code = acfg.code()
 
-    # straggler mitigation: slow nodes to the chain ends (positions with the
-    # least per-tick work); chain position p stores codeword row p on
-    # physical node perm[p].
-    if node_speeds is not None:
-        perm = chain_lib.order_chain(np.asarray(node_speeds), acfg.n, acfg.k)
-    else:
-        perm = np.arange(acfg.n)
+    # chain position p stores codeword row p on physical node perm[p]
+    perm, nc, sched = _plan_placement(acfg, manifest["block_bytes"],
+                                      topology, node_speeds)
 
     data_w = _words(blocks, acfg.l)
-    nc = acfg.num_chunks  # largest feasible chunk count for this block size
-    while nc > 1 and data_w.shape[1] % nc:
+    # largest feasible chunk count: every chunk must be whole uint32 lanes
+    # (the device chain's granularity; the host oracle only needs nc | B,
+    # which the stricter condition implies)
+    while nc > 1 and data_w.shape[1] % (gf.LANES[acfg.l] * nc):
         nc //= 2
+    if sched is not None:
+        sched = {**sched, "num_chunks": int(nc)}  # record what actually ran
     if use_devices is None:
         use_devices = len(jax.devices()) >= acfg.n
     if use_devices:
         coded_w = np.asarray(chain_lib.pipelined_encode(
-            code, data_w, num_chunks=nc))
+            code, data_w, num_chunks=nc,
+            order=_device_order(perm, sched is not None)))
     else:
         coded_w, _ = rapidraid.pipeline_encode_local(
             code, np.asarray(data_w), num_chunks=nc)
@@ -169,14 +218,68 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
         "coded_digests": [digest(coded[i].tobytes()) for i in range(acfg.n)],
         "orig_digests": manifest["digests"],
     }
+    if sched is not None:
+        manifest["sched"] = sched
     _put_manifest(store, step, manifest)
     return manifest
+
+
+def _archive_group(store: NodeStore, grp: list[int], acfg: ArchiveConfig,
+                   code, perm: np.ndarray, num_chunks: int, stagger: int,
+                   use_devices: bool, manifests: dict[int, dict],
+                   sched: dict | None) -> dict[int, dict]:
+    """Encode one rectangular (same block length, same placement) batch of
+    hot steps and place/manifest the coded blocks."""
+    from repro.kernels.gf_encode import ops as kernel_ops
+    # blocks are loaded one group at a time (and released after the
+    # group's encode) so peak host memory is one group, not the batch
+    objs_w = np.stack([_words(hot_load(store, s, manifests[s]), acfg.l)
+                       for s in grp])
+    B = objs_w.shape[-1]
+    nc = num_chunks
+    while nc > 1 and B % (gf.LANES[acfg.l] * nc):
+        nc //= 2
+    if sched is not None:
+        sched = {**sched, "num_chunks": int(nc)}  # record what actually ran
+    if use_devices:
+        coded_w = np.asarray(multi_lib.pipelined_encode_many(
+            code, objs_w, num_chunks=nc, stagger=stagger,
+            order=_device_order(perm, sched is not None)))
+    else:
+        # one fused batched kernel launch over the whole group
+        Bp = B // gf.LANES[acfg.l]
+        coded_w = np.asarray(kernel_ops.encode_words(
+            code.G, jnp.asarray(objs_w), acfg.l,
+            block=kernel_ops.pick_block(Bp)))
+    out: dict[int, dict] = {}
+    for b, step in enumerate(grp):
+        coded = _u8(coded_w[b])
+        for pos in range(acfg.n):
+            store.put(int(perm[pos]), ARC.format(step=step, i=pos),
+                      coded[pos].tobytes())
+        manifest = manifests[step]
+        for node, held in enumerate(manifest["placement"]):
+            for j in held:
+                store.delete(node, HOT.format(step=step, j=j))
+        manifest = {
+            **manifest, "tier": "archive",
+            "perm": [int(p) for p in perm],
+            "coded_digests": [digest(coded[i].tobytes())
+                              for i in range(acfg.n)],
+            "orig_digests": manifest["digests"],
+            "batched_with": [int(s) for s in grp],
+        }
+        if sched is not None:
+            manifest["sched"] = sched
+        _put_manifest(store, step, manifest)
+        out[step] = manifest
+    return out
 
 
 def archive_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
                  node_speeds: np.ndarray | None = None,
                  use_devices: bool | None = None,
-                 stagger: int = 1) -> list[dict]:
+                 stagger: int = 1, topology=None) -> list[dict]:
     """Batched migration: archive B hot steps CONCURRENTLY (paper §VI).
 
     All steps' objects are encoded together — on an n-device mesh via the
@@ -185,13 +288,15 @@ def archive_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
     pallas launch (the object axis rides the kernel grid). Steps whose block
     lengths differ are grouped so each fused encode sees a rectangular
     (B, k, block_len) batch. Returns the updated manifests in step order.
+
+    ``topology`` engages the multi-chain scheduler
+    (``repro.core.scheduler.plan_many``): when the cluster holds at least
+    two chains' worth of nodes, concurrent chains are bin-packed onto
+    DISJOINT node sets (no shared NICs); otherwise every chain runs
+    staggered on the one scheduler-ordered node set. Each step's manifest
+    records its placement (``perm`` / ``sched``) so repair reuses it.
     """
-    from repro.kernels.gf_encode import ops as kernel_ops
     code = acfg.code()
-    if node_speeds is not None:
-        perm = chain_lib.order_chain(np.asarray(node_speeds), acfg.n, acfg.k)
-    else:
-        perm = np.arange(acfg.n)
     if use_devices is None:
         use_devices = len(jax.devices()) >= acfg.n
 
@@ -199,48 +304,36 @@ def archive_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
     groups: dict[int, list[int]] = {}
     for step in steps:
         manifest = get_manifest(store, step)
-        assert manifest["tier"] == "hot", f"step {step} already archived"
+        if manifest["tier"] != "hot":
+            raise ValueError(f"step {step} already archived")
         manifests[step] = manifest
         groups.setdefault(manifest["block_bytes"], []).append(step)
 
     out: dict[int, dict] = {}
-    for _, grp in groups.items():
-        # blocks are loaded one group at a time (and released after the
-        # group's encode) so peak host memory is one group, not the batch
-        objs_w = np.stack([_words(hot_load(store, s, manifests[s]), acfg.l)
-                           for s in grp])
-        B = objs_w.shape[-1]
-        if use_devices:
-            nc = acfg.num_chunks
-            while nc > 1 and B % (gf.LANES[acfg.l] * nc):
-                nc //= 2
-            coded_w = np.asarray(multi_lib.pipelined_encode_many(
-                code, objs_w, num_chunks=nc, stagger=stagger))
+    for block_bytes, grp in groups.items():
+        if topology is not None:
+            from repro.core import scheduler
+            mplan = scheduler.plan_many(topology, len(grp), acfg.n, acfg.k,
+                                        float(block_bytes), stagger=stagger)
+            by_chain: dict[int, list[int]] = {}
+            for b, s in enumerate(grp):
+                by_chain.setdefault(mplan.assignment[b], []).append(s)
+            for g, sub in sorted(by_chain.items()):
+                plan = mplan.plans[g]
+                out.update(_archive_group(
+                    store, sub, acfg, code, np.asarray(plan.order),
+                    plan.num_chunks, stagger, use_devices, manifests,
+                    {**plan.to_manifest(), "topology": topology.to_dict(),
+                     "chain_group": int(g)}))
         else:
-            # one fused batched kernel launch over the whole group
-            Bp = B // gf.LANES[acfg.l]
-            coded_w = np.asarray(kernel_ops.encode_words(
-                code.G, jnp.asarray(objs_w), acfg.l,
-                block=kernel_ops.pick_block(Bp)))
-        for b, step in enumerate(grp):
-            coded = _u8(coded_w[b])
-            for pos in range(acfg.n):
-                store.put(int(perm[pos]), ARC.format(step=step, i=pos),
-                          coded[pos].tobytes())
-            manifest = manifests[step]
-            for node, held in enumerate(manifest["placement"]):
-                for j in held:
-                    store.delete(node, HOT.format(step=step, j=j))
-            manifest = {
-                **manifest, "tier": "archive",
-                "perm": [int(p) for p in perm],
-                "coded_digests": [digest(coded[i].tobytes())
-                                  for i in range(acfg.n)],
-                "orig_digests": manifest["digests"],
-                "batched_with": [int(s) for s in grp],
-            }
-            _put_manifest(store, step, manifest)
-            out[step] = manifest
+            if node_speeds is not None:
+                perm = chain_lib.order_chain(np.asarray(node_speeds),
+                                             acfg.n, acfg.k)
+            else:
+                perm = np.arange(acfg.n)
+            out.update(_archive_group(store, grp, acfg, code, perm,
+                                      acfg.num_chunks, stagger, use_devices,
+                                      manifests, None))
     return [out[s] for s in steps]
 
 
@@ -322,8 +415,12 @@ def restore_blocks(store: NodeStore, step: int, acfg: ArchiveConfig,
         data_w = rapidraid.decode_np(code, ids, shards_w)
     blocks = _u8(data_w)
     for j in range(k):
-        assert digest(blocks[j].tobytes()) == manifest["orig_digests"][j], \
-            f"decode mismatch on block {j}"
+        # a real exception (asserts vanish under python -O): a decode that
+        # does not match the archived digest must never be returned
+        if digest(blocks[j].tobytes()) != manifest["orig_digests"][j]:
+            raise ValueError(
+                f"step {step}: decoded block {j} does not match the archived "
+                f"digest — corrupt shard set or code mismatch")
     return blocks
 
 
@@ -434,7 +531,8 @@ def repair_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
     state: dict[int, tuple[list[int], list[int], list[bytes]]] = {}
     for step in steps:
         manifest = get_manifest(store, step)
-        assert manifest["tier"] == "archive", f"step {step} not archived"
+        if manifest["tier"] != "archive":
+            raise ValueError(f"step {step} not archived")
         manifests[step] = manifest
         missing, helpers, raws = _repair_state(store, step, manifest)
         state[step] = (missing, helpers, raws)

@@ -109,11 +109,22 @@ def _encode_shard(local, bp_psi, bp_xi, *, l: int, num_chunks: int):
     return out[None]
 
 
-def make_chain_mesh(n: int) -> Mesh:
+def make_chain_mesh(n: int, order=None) -> Mesh:
+    """Chain mesh of n devices; ``order[p]`` is the device playing chain
+    position p (heterogeneity-aware placement, ``repro.core.scheduler``).
+    Default: device p plays position p."""
     devs = jax.devices()
     if len(devs) < n:
         raise ValueError(f"need {n} devices for an n={n} chain, have {len(devs)}")
-    return Mesh(np.asarray(devs[:n]), (AXIS,))
+    if order is None:
+        return Mesh(np.asarray(devs[:n]), (AXIS,))
+    order = [int(i) for i in order]
+    if sorted(set(order)) != sorted(order) or len(order) != n:
+        raise ValueError(f"order must be {n} distinct device ids, got {order}")
+    if max(order) >= len(devs):
+        raise ValueError(f"order references device {max(order)}, "
+                         f"have {len(devs)}")
+    return Mesh(np.asarray([devs[i] for i in order]), (AXIS,))
 
 
 @functools.partial(jax.jit, static_argnames=("code", "num_chunks", "mesh"))
@@ -129,15 +140,19 @@ def _encode_jit(locals_packed, code: RapidRAIDCode, num_chunks: int, mesh: Mesh)
 
 
 def pipelined_encode(code: RapidRAIDCode, data, num_chunks: int = 8,
-                     mesh: Mesh | None = None) -> jax.Array:
+                     mesh: Mesh | None = None, order=None) -> jax.Array:
     """Archive object ``data`` (k, B) words -> codeword blocks (n, B) words.
 
     Each codeword block materializes on the device that will store it — no
-    post-encode scatter, exactly the paper's pipelined scheme.
+    post-encode scatter, exactly the paper's pipelined scheme. ``order``
+    (scheduler placement) assigns device ``order[p]`` to chain position p;
+    row p of the result lives on that device.
     """
     data = np.asarray(data)
     assert data.shape[0] == code.k
-    mesh = mesh or make_chain_mesh(code.n)
+    if mesh is not None and order is not None:
+        raise ValueError("pass either mesh or order, not both")
+    mesh = mesh or make_chain_mesh(code.n, order)
     local = build_local_blocks(code, data)
     lanes = gf.LANES[code.l]
     assert data.shape[1] % (lanes * num_chunks) == 0, (

@@ -86,16 +86,21 @@ def _encode_many_jit(locals_packed, code: RapidRAIDCode, num_chunks: int,
 
 
 def pipelined_encode_many(code: RapidRAIDCode, objects, num_chunks: int = 8,
-                          stagger: int = 1, mesh=None) -> jax.Array:
+                          stagger: int = 1, mesh=None,
+                          order=None) -> jax.Array:
     """Archive B_obj objects concurrently: (B_obj, k, B) -> (B_obj, n, B).
 
     One fused shard_map launch; every object's codeword block i materializes
     on the device that stores it, exactly as the single-object chain.
+    ``order`` (scheduler placement) assigns device ``order[p]`` to chain
+    position p for every chain in the batch.
     """
     objects = np.asarray(objects)
     B_obj, kk, B = objects.shape
     assert kk == code.k
-    mesh = mesh or chain_lib.make_chain_mesh(code.n)
+    if mesh is not None and order is not None:
+        raise ValueError("pass either mesh or order, not both")
+    mesh = mesh or chain_lib.make_chain_mesh(code.n, order)
     lanes = gf.LANES[code.l]
     assert B % (lanes * num_chunks) == 0, (
         f"block length {B} must divide into {num_chunks} chunks of whole "

@@ -33,11 +33,16 @@ def tree_to_bytes(tree) -> bytes:
     metas = []
     bufs = []
     off = 0
-    for leaf in leaves:
+    for idx, leaf in enumerate(leaves):
         arr = np.asarray(leaf)
+        if arr.dtype.hasobject:
+            raise TypeError(
+                f"cannot serialize leaf {idx} of dtype object "
+                f"(type {type(leaf).__name__}): checkpoint leaves must be "
+                f"numeric/bool arrays with a fixed byte layout")
         raw = np.ascontiguousarray(arr)
         # bfloat16 etc: persist via uint8 view of the raw bytes
-        data = raw.view(np.uint8).reshape(-1) if raw.dtype != object else None
+        data = raw.view(np.uint8).reshape(-1)
         metas.append({"dtype": str(arr.dtype), "shape": list(arr.shape),
                       "offset": off, "nbytes": int(data.nbytes)})
         bufs.append(data.tobytes())
@@ -50,14 +55,24 @@ def tree_to_bytes(tree) -> bytes:
 def bytes_to_leaves(blob: bytes, like_tree):
     """Rebuild arrays; tree structure comes from ``like_tree``."""
     import jax
-    assert blob[:4] == MAGIC, "corrupt checkpoint blob"
+    # real exceptions, not asserts: corruption checks must survive python -O
+    if blob[:4] != MAGIC:
+        raise ValueError(
+            f"corrupt checkpoint blob: bad magic {blob[:4]!r} (want {MAGIC!r})")
     hlen = int.from_bytes(blob[4:12], "little")
-    header = json.loads(blob[12:12 + hlen])
+    if 12 + hlen > len(blob):
+        raise ValueError(
+            f"corrupt checkpoint blob: header length {hlen} exceeds blob")
+    try:
+        header = json.loads(blob[12:12 + hlen])
+    except json.JSONDecodeError as e:
+        raise ValueError(f"corrupt checkpoint blob: bad header ({e})") from None
     body = memoryview(blob)[12 + hlen:]
     leaves_like, treedef = jax.tree.flatten(like_tree)
     metas = header["leaves"]
-    assert len(metas) == len(leaves_like), \
-        f"checkpoint has {len(metas)} leaves, expected {len(leaves_like)}"
+    if len(metas) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {len(metas)} leaves, expected {len(leaves_like)}")
     out = []
     for meta, like in zip(metas, leaves_like):
         raw = np.frombuffer(body, dtype=np.uint8, count=meta["nbytes"],

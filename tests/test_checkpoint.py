@@ -37,6 +37,28 @@ def test_codec_roundtrip():
                                       np.asarray(b, np.float32))
 
 
+def test_codec_object_dtype_leaf_raises_typeerror():
+    """Object-dtype leaves used to die with AttributeError on None.nbytes;
+    now they get a clear TypeError naming the offending leaf."""
+    bad = {"ok": np.zeros(3, np.float32),
+           "bad": np.array(["a", "bc"], dtype=object)}
+    with pytest.raises(TypeError, match="object"):
+        obj.tree_to_bytes(bad)
+
+
+def test_codec_corruption_raises_valueerror_not_assert():
+    """Corruption checks must be real exceptions (asserts vanish under -O)."""
+    state = _state()
+    blob = obj.tree_to_bytes(state)
+    with pytest.raises(ValueError, match="magic"):
+        obj.bytes_to_leaves(b"XXXX" + blob[4:], state)
+    with pytest.raises(ValueError, match="leaves"):
+        obj.bytes_to_leaves(blob, {"only": np.zeros(1)})
+    truncated = blob[:4] + (10 ** 9).to_bytes(8, "little") + blob[12:]
+    with pytest.raises(ValueError, match="header"):
+        obj.bytes_to_leaves(truncated, state)
+
+
 @hypothesis.given(st.integers(0, 10_000), st.integers(1, 200))
 def test_split_join_blocks(seed, nbytes):
     rng = np.random.default_rng(seed)

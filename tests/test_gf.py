@@ -77,6 +77,20 @@ def test_pack_unpack_roundtrip(l):
     np.testing.assert_array_equal(np.asarray(gf.unpack_u32(xp, l)), x)
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 129), st.sampled_from([8, 16]),
+       st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip_ragged_property(rows, groups, l, seed):
+    """Property: pack/unpack is exact on RAGGED shapes — any row count and
+    any whole-lane word count (odd lane groups, non-power-of-two widths)."""
+    rng = np.random.default_rng(seed)
+    W = groups * gf.LANES[l]
+    x = rng.integers(0, 1 << l, size=(rows, W)).astype(gf.WORD_DTYPE[l])
+    xp = gf.pack_u32(jnp.asarray(x), l)
+    assert xp.shape == (rows, groups)
+    np.testing.assert_array_equal(np.asarray(gf.unpack_u32(xp, l)), x)
+
+
 @pytest.mark.parametrize("l", FIELDS)
 @pytest.mark.parametrize("c", [0, 1, 2, 97, 255])
 def test_bitplane_const_mul_matches_table(l, c):

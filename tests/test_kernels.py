@@ -85,6 +85,56 @@ def test_mxu_bitlift_kernel(l, n, k):
     np.testing.assert_array_equal(np.asarray(got), rr.encode_np(code, data))
 
 
+@pytest.mark.parametrize("l,B", [(8, 1000), (16, 998), (16, 1002)])
+def test_mxu_vpu_numpy_parity_ragged_lengths(l, B):
+    """Word counts NOT divisible by the kernel block (and odd packed
+    lengths): MXU bit-lift, VPU bit-plane, and the numpy oracle must agree.
+    Regression for the bare-assert crash (MXU) and the block=1 per-word
+    grid degeneration (pick_block on odd packed lengths)."""
+    code = rr.make_code(8, 4, l=l, seed=7)
+    rng = np.random.default_rng(6)
+    data = rand_words(rng, 4, B, l)
+    want = rr.encode_np(code, data)
+    got_mxu = ops.encode_mxu(code.G, jnp.asarray(data), l, block=1024)
+    assert got_mxu.dtype == gf.WORD_DTYPE[l]  # l=16 output dtype round-trips
+    np.testing.assert_array_equal(np.asarray(got_mxu), want)
+    got_vpu = ops.encode_words(code.G, jnp.asarray(data), l, block=512)
+    np.testing.assert_array_equal(np.asarray(got_vpu), want)
+
+
+def test_encode_packed_ragged_odd_packed_length():
+    """Odd packed length straight through encode_packed (pad-and-slice)."""
+    l = 16
+    code = rr.make_code(6, 4, l=l, seed=9)
+    rng = np.random.default_rng(8)
+    data = rand_words(rng, 4, 998, l)            # Bp = 499, odd
+    dp = gf.pack_u32(jnp.asarray(data), l)
+    assert dp.shape[-1] == 499
+    got = ops.encode_packed(code.G, dp, l)
+    assert got.shape == (6, 499)
+    np.testing.assert_array_equal(
+        np.asarray(gf.unpack_u32(got, l)), rr.encode_np(code, data))
+
+
+def test_pick_block_never_degenerates():
+    assert ops.pick_block(499) == 512
+    assert ops.pick_block(250) == 256
+    assert ops.pick_block(4096) == kernel.DEFAULT_BLOCK
+    assert ops.pick_block(1) == 1
+    assert all(ops.pick_block(bp) >= min(bp, 256) for bp in range(1, 2000))
+
+
+def test_kernel_raises_not_asserts_on_bad_shapes():
+    """Direct kernel calls get a real ValueError (asserts vanish under -O)."""
+    M = np.ones((2, 2), dtype=np.uint8)
+    with pytest.raises(ValueError):
+        kernel.gf_encode_kernel(M, jnp.zeros((2, 3), jnp.uint32), 8,
+                                block=2)
+    with pytest.raises(ValueError):
+        kernel.gf_encode_mxu_kernel(M, jnp.zeros((2, 3), jnp.int32), 8,
+                                    block=2)
+
+
 def test_bitlift_matrix_rank():
     """F2 lift of an invertible GF matrix must have full F2 rank (k*l)."""
     l = 8

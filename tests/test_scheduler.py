@@ -1,0 +1,286 @@
+"""Heterogeneity-aware scheduler: topology model, placement, chunking, and
+the archival wiring (manifest-recorded placements reused by repair)."""
+import itertools
+
+import numpy as np
+import pytest
+
+from benchmarks import fig_hetero, netsim
+from repro.core import scheduler, topology as topo_lib
+from repro.core.topology import Topology
+from repro.storage import archive as arc
+from repro.storage.object_store import NodeStore
+
+
+# ---------------------------------------------------------------------------
+# topology / makespan model
+# ---------------------------------------------------------------------------
+
+
+def test_makespan_homogeneous_matches_hand_formula():
+    """Uniform cluster: the model reduces to Eq. (2)'s fill + steady shape."""
+    n, k, C = 8, 5, 8
+    topo = Topology.uniform(n, compute_rate=1e9, nic_bw=2e8,
+                            hop_latency=0.0, tick_overhead=0.0)
+    block = 16e6
+    chunk = block / C
+    blocks = topo_lib.position_blocks(n, k)
+    t_comp = [b * chunk / 1e9 for b in blocks]
+    # interior NICs split over 2 flows -> 1e8; end links limited by the
+    # interior endpoint
+    t_link = [chunk / 1e8] * (n - 1)
+    fill = sum(t_comp) + sum(t_link)
+    per_tick = max(t_comp[p] + (t_link[p] if p < n - 1 else 0)
+                   for p in range(n))
+    want = fill + (C - 1) * per_tick
+    got = topo_lib.chain_makespan(topo, list(range(n)), k, block, C)
+    assert got == pytest.approx(want, rel=1e-12)
+
+
+def test_position_blocks_matches_placement():
+    from repro.core import rapidraid
+    for n, k in [(8, 4), (8, 5), (6, 4), (16, 11)]:
+        want = [len(b) for b in rapidraid.placement(n, k)]
+        assert topo_lib.position_blocks(n, k) == want
+
+
+def test_makespan_monotone_in_slow_factor():
+    topo = Topology.uniform(6, tick_overhead=1e-3)
+    order = list(range(6))
+    times = [topo_lib.chain_makespan(topo.with_slow(2, f), order, 4, 8e6, 8)
+             for f in (1, 2, 4, 8)]
+    assert all(b > a for a, b in zip(times, times[1:]))
+
+
+def test_topology_dict_roundtrip():
+    topo = Topology.uniform(4, tick_overhead=2e-3).with_slow(1, 4)
+    back = Topology.from_dict(topo.to_dict())
+    assert back == topo
+
+
+def test_measure_compute_rates_calibration():
+    """The calibration micro-benchmark returns a positive bytes/s rate for
+    every local device (one on the tier-1 runner)."""
+    rates = topo_lib.measure_compute_rates(l=16, nwords=1 << 10, iters=1)
+    assert len(rates) >= 1
+    assert all(r > 0 for r in rates)
+    topo = topo_lib.measured(nwords=1 << 10)
+    assert topo.n_nodes == len(rates)
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        Topology(compute_rate=(1e9,), nic_bw=(1e8, 1e8))
+    with pytest.raises(ValueError):
+        Topology(compute_rate=(0.0, 1e9), nic_bw=(1e8, 1e8))
+
+
+# ---------------------------------------------------------------------------
+# chunk-count selection
+# ---------------------------------------------------------------------------
+
+
+def test_best_num_chunks_matches_bruteforce_argmin():
+    topo = Topology.uniform(8, tick_overhead=2e-3).with_slow(3, 4)
+    order = list(range(8))
+    cands = scheduler.DEFAULT_CHUNK_CANDIDATES
+    want = min(cands, key=lambda c: topo_lib.chain_makespan(
+        topo, order, 5, 64e6, c))
+    got, t = scheduler.best_num_chunks(topo, order, 5, 64e6)
+    assert got == want
+    assert t == topo_lib.chain_makespan(topo, order, 5, 64e6, got)
+
+
+def test_chunk_choice_brackets_analytic_optimum():
+    """The discrete pick must sit within the power-of-two bracket around the
+    closed-form C* = sqrt((fill - steady) / tick_overhead)."""
+    topo = Topology.uniform(8, tick_overhead=2e-3).with_slow(3, 4)
+    order = list(range(8))
+    c_star = scheduler.analytic_num_chunks(topo, order, 5, 64e6)
+    chosen, _ = scheduler.best_num_chunks(topo, order, 5, 64e6)
+    assert c_star / 2 <= chosen <= c_star * 2, (c_star, chosen)
+
+
+def test_analytic_unbounded_without_overhead():
+    topo = Topology.uniform(4)  # tick_overhead = 0
+    assert scheduler.analytic_num_chunks(topo, range(4), 3, 8e6) == np.inf
+
+
+# ---------------------------------------------------------------------------
+# placement search
+# ---------------------------------------------------------------------------
+
+
+def test_exhaustive_placement_is_optimal_small():
+    """n=5: the vectorized exhaustive search equals scalar brute force."""
+    topo = Topology.uniform(5, tick_overhead=1e-3).with_slow(2, 4)
+    plan = scheduler.plan_chain(topo, k=4, block_bytes=8e6)
+    best = min(topo_lib.chain_makespan(topo, o, 4, 8e6, plan.num_chunks)
+               for o in itertools.permutations(range(5)))
+    got = topo_lib.chain_makespan(topo, plan.order, 4, 8e6, plan.num_chunks)
+    assert got == pytest.approx(best, rel=1e-12)
+
+
+def test_heuristic_close_to_greedy_seed_and_improves_naive():
+    """n=12 (beyond the exhaustive limit): the greedy+polish plan must beat
+    naive in-order placement under the model."""
+    topo = Topology.uniform(12, tick_overhead=1e-3).with_slow(5, 4)
+    plan = scheduler.plan_chain(topo, k=8, block_bytes=32e6)
+    naive = topo_lib.chain_makespan(topo, list(range(12)), 8, 32e6,
+                                    plan.num_chunks)
+    assert plan.makespan < naive
+    # the slow node must not sit on a two-block middle position
+    blocks = topo_lib.position_blocks(12, 8)
+    pos_of_slow = list(plan.order).index(5)
+    assert blocks[pos_of_slow] == 1
+
+
+def test_placement_beats_worst_ordering_in_netsim():
+    """The plan (chosen on the topology model) evaluated under the
+    independent netsim fluid model beats naive and the worst ordering."""
+    n, k, slow = 8, 5, 3
+    cfg = netsim.hetero_config({slow: 4.0},
+                               base=netsim.NetConfig(n_nodes=n))
+    plan = scheduler.plan_chain(fig_hetero.topology_from_netsim(cfg), k,
+                                cfg.block_bytes)
+    t_plan = netsim.pipeline_time(cfg, order=np.asarray(plan.order),
+                                  n=n, k=k)
+    t_naive = netsim.pipeline_time(cfg, n=n, k=k)
+    rng = np.random.default_rng(0)
+    sampled = [netsim.pipeline_time(cfg, order=rng.permutation(n), n=n, k=k)
+               for _ in range(50)]
+    assert t_plan <= t_naive
+    assert t_plan < max(sampled)
+
+
+def test_scheduler_beats_naive_by_1p5x_on_4x_slow_cluster():
+    """Acceptance gate: modeled heterogeneous cluster (one node 4x slower),
+    scheduler placement + chunking >= 1.5x over naive + default chunks."""
+    rows = {r["slow_factor"]: r for r in fig_hetero.network_model()}
+    assert rows[4]["speedup"] >= 1.5, rows[4]
+
+
+def test_real_forced_slow_same_direction():
+    """Real wall-clock (forced-slow GF combine): scheduled <= naive."""
+    row = fig_hetero.real_forced_slow(nwords=1 << 11, iters=1)
+    assert row["scheduled_s"] < row["naive_s"], row
+
+
+# ---------------------------------------------------------------------------
+# multi-object assignment
+# ---------------------------------------------------------------------------
+
+
+def test_plan_many_disjoint_groups():
+    topo = Topology.uniform(16, tick_overhead=1e-3).with_slow(0, 4)
+    mplan = scheduler.plan_many(topo, n_objects=6, n=8, k=5,
+                                block_bytes=8e6)
+    assert len(mplan.plans) == 2
+    sets = [set(p.order) for p in mplan.plans]
+    assert not (sets[0] & sets[1])
+    assert sets[0] | sets[1] == set(range(16))
+    # objects spread over both chains
+    assert set(mplan.assignment) == {0, 1}
+
+
+def test_plan_many_single_group_when_nodes_scarce():
+    topo = Topology.uniform(8, tick_overhead=1e-3)
+    mplan = scheduler.plan_many(topo, n_objects=4, n=8, k=5,
+                                block_bytes=8e6)
+    assert len(mplan.plans) == 1
+    assert mplan.assignment == (0, 0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# archival wiring: placements recorded in the manifest, reused by repair
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def blocks5():
+    rng = np.random.default_rng(7)
+    return rng.integers(0, 256, size=(5, 256)).astype(np.uint8)
+
+
+def test_archive_step_records_sched_and_repair_reads_perm(tmp_path, blocks5):
+    acfg = arc.ArchiveConfig(n=8, k=5, l=16, num_chunks=4)
+    topo = Topology.uniform(8, tick_overhead=1e-3).with_slow(3, 4)
+    store = NodeStore(str(tmp_path), 8)
+    arc.hot_save(store, 1, blocks5, acfg)
+    m = arc.archive_step(store, 1, acfg, topology=topo, use_devices=False)
+    assert m["perm"] == m["sched"]["order"]
+    assert m["sched"]["num_chunks"] >= 1
+    assert Topology.from_dict(m["sched"]["topology"]) == topo
+    # the slow node must sit at a chain end (a one-block position)
+    blocks_at = topo_lib.position_blocks(8, 5)
+    assert blocks_at[m["perm"].index(3)] == 1
+    # repair must locate shards via the manifest perm, not identity order
+    store.fail_node(m["perm"][2])
+    assert arc.repair(store, 1, acfg, use_devices=False) == [2]
+    np.testing.assert_array_equal(
+        arc.restore_blocks(store, 1, acfg), blocks5)
+
+
+def test_archive_many_bin_packs_disjoint_chains(tmp_path, blocks5):
+    acfg = arc.ArchiveConfig(n=8, k=5, l=16, num_chunks=4)
+    topo = Topology.uniform(16, tick_overhead=1e-3).with_slow(3, 4)
+    store = NodeStore(str(tmp_path), 16)
+    for s in range(4):
+        arc.hot_save(store, s, blocks5, acfg)
+    ms = arc.archive_many(store, list(range(4)), acfg, topology=topo,
+                          use_devices=False)
+    node_sets = {tuple(sorted(m["perm"])) for m in ms}
+    assert len(node_sets) == 2
+    a, b = node_sets
+    assert not (set(a) & set(b))
+    for s, m in enumerate(ms):
+        assert m["sched"]["order"] == m["perm"]
+        np.testing.assert_array_equal(
+            arc.restore_blocks(store, s, acfg), blocks5)
+    # batched heal after losing one node of each chain
+    store.fail_node(ms[0]["perm"][0])
+    store.fail_node(ms[1]["perm"][0])
+    repaired = arc.repair_many(store, list(range(4)), acfg,
+                               use_devices=False)
+    assert all(r in ([0], []) for r in repaired)
+    for s in range(4):
+        np.testing.assert_array_equal(
+            arc.restore_blocks(store, s, acfg), blocks5)
+
+
+def test_archive_step_clamps_and_records_feasible_chunk_count(tmp_path):
+    """A scheduler-chosen chunk count must be halved to lane-granularity
+    feasibility BEFORE encoding, and the manifest must record the count the
+    encode actually ran with (not the planned one)."""
+    acfg = arc.ArchiveConfig(n=8, k=5, l=16, num_chunks=8)
+    # near-zero tick overhead -> the planner wants the max candidate (256),
+    # infeasible for a 384-word block (384 % (2 lanes * 256) != 0)
+    topo = Topology.uniform(8, tick_overhead=1e-12).with_slow(3, 4)
+    rng = np.random.default_rng(11)
+    blocks = rng.integers(0, 256, size=(5, 768)).astype(np.uint8)  # 384 words
+    store = NodeStore(str(tmp_path), 8)
+    arc.hot_save(store, 1, blocks, acfg)
+    m = arc.archive_step(store, 1, acfg, topology=topo, use_devices=False)
+    nc = m["sched"]["num_chunks"]
+    assert 384 % (2 * nc) == 0, nc          # feasible at lane granularity
+    assert nc == 64                          # 256 -> 128 -> 64
+    np.testing.assert_array_equal(arc.restore_blocks(store, 1, acfg), blocks)
+
+
+def test_plan_many_single_chain_picks_cheapest_nodes():
+    """n < n_nodes < 2n: the one chain must run on the n cheapest nodes
+    (slow surplus nodes idle), matching archive_step's selection."""
+    topo = Topology.uniform(10, tick_overhead=1e-3).with_slow(0, 8)
+    mplan = scheduler.plan_many(topo, n_objects=2, n=8, k=5,
+                                block_bytes=8e6)
+    assert len(mplan.plans) == 1
+    assert 0 not in mplan.plans[0].order
+
+
+def test_archive_step_topology_too_small_raises(tmp_path, blocks5):
+    acfg = arc.ArchiveConfig(n=8, k=5, l=16)
+    store = NodeStore(str(tmp_path), 8)
+    arc.hot_save(store, 1, blocks5, acfg)
+    with pytest.raises(ValueError):
+        arc.archive_step(store, 1, acfg, topology=Topology.uniform(4),
+                         use_devices=False)

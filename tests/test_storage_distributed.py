@@ -147,3 +147,42 @@ def test_elastic_restore_new_mesh():
     """Restore a RapidRAID-archived checkpoint onto a different mesh shape."""
     out = run_with_devices(ELASTIC_SNIPPET, ndev=4)
     assert "OK" in out
+
+
+SCHEDULED_ORDER_SNIPPET = """
+import numpy as np, jax
+from repro.core import gf, rapidraid as rr
+from repro.core.scheduler import plan_chain
+from repro.core.topology import Topology
+from repro.storage import chain, multi
+
+n, k, l = 8, 5, 16
+code = rr.make_code(n, k, l=l, seed=13)
+topo = Topology.uniform(n, tick_overhead=1e-3).with_slow(3, 4)
+plan = plan_chain(topo, k, block_bytes=1024.0)
+order = list(plan.order)
+assert order != list(range(n))              # the slow node moved
+rng = np.random.default_rng(3)
+B = gf.LANES[l] * 4 * 8
+data = rng.integers(0, 1 << l, size=(k, B)).astype(gf.WORD_DTYPE[l])
+want = rr.encode_np(code, data)
+# scheduler placement through the REAL device chain: device order[p] plays
+# position p; the codeword is placement-invariant
+got = np.asarray(chain.pipelined_encode(code, data, num_chunks=4,
+                                        order=order))
+np.testing.assert_array_equal(got, want)
+# and through the staggered multi-chain
+objs = rng.integers(0, 1 << l, size=(3, k, B)).astype(gf.WORD_DTYPE[l])
+got_many = np.asarray(multi.pipelined_encode_many(code, objs, num_chunks=4,
+                                                  order=order))
+for b in range(3):
+    np.testing.assert_array_equal(got_many[b], rr.encode_np(code, objs[b]))
+print("OK")
+"""
+
+
+@pytest.mark.multidevice
+def test_chain_encode_with_scheduler_placement():
+    """Scheduler-chosen device order through the real shard_map chain."""
+    out = run_with_devices(SCHEDULED_ORDER_SNIPPET, ndev=8)
+    assert "OK" in out
