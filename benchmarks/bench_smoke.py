@@ -32,6 +32,7 @@ import jax
 from benchmarks import fig4_coding_times as fig4
 from benchmarks import fig_hetero
 from benchmarks import fig_repair_times as figr
+from benchmarks import fig_throughput as figt
 
 # >30% regression in a pipeline speedup fails the diff
 REGRESSION_TOLERANCE = 0.30
@@ -71,6 +72,12 @@ def extract_speedups(results: dict) -> dict[str, float]:
     het = real.get("hetero_forced_slow", {})
     if "speedup" in het:
         sp["real_hetero_forced_slow"] = het["speedup"]
+    thr = real.get("throughput", {})
+    for op in ("encode", "decode", "repair", "encode_many"):
+        if op in thr and "speedup" in thr[op]:
+            # warm-call speedup over the cold (per-call recompile) path —
+            # the tax every call paid before the jitcache fast path
+            sp[f"real_warm_{op}"] = thr[op]["speedup"]
     return {k: round(v, 3) for k, v in sp.items()}
 
 
@@ -144,6 +151,10 @@ def main() -> int:
             nwords=1 << 13)
     except Exception as e:  # noqa: BLE001
         real["hetero_forced_slow"] = {"error": str(e)[:500]}
+    try:
+        real["throughput"] = figt.real_throughput(nwords=2048, reps=3)
+    except Exception as e:  # noqa: BLE001
+        real["throughput"] = {"error": str(e)[:500]}
     results["speedups"] = extract_speedups(results)
     results["meta"]["wall_s"] = round(time.time() - t0, 1)
     with open(args.out, "w") as f:

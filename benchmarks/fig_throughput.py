@@ -1,0 +1,117 @@
+"""Warm-path archival throughput: cold vs warm latency, MB/s, objects/s.
+
+The paper's headline metric is coding TIME, and the model-level benchmarks
+(fig4, fig_repair_times) already reproduce the pipeline-vs-star ratios. This
+benchmark measures the other tax the models hide: the per-call constant cost
+of the distributed entry points themselves. Before the warm fast path
+(``repro.core.jitcache`` + in-program placement/packing + fused Pallas
+ticks), EVERY archival call rebuilt and recompiled its ``shard_map`` program
+and staged bytes through host numpy — the "cold" column below was the
+steady state. Now only the first call per (code, mesh, shape, chunks) key
+pays it.
+
+Per entry point — encode, decode, repair, and batched encode_many — a
+subprocess with n XLA host devices reports:
+
+  cold_s     first-call latency (trace + compile + host prep + run)
+  warm_s     median repeat-call latency (the cached executable)
+  warm_MBps  object payload bytes / warm_s
+  speedup    cold_s / warm_s — the tax a warm call no longer pays
+
+plus warm objects/s for the staggered batch. Shared-core caveat as in fig4:
+absolute MB/s on one CPU core is not a cluster number; the cold/warm RATIO
+is the machine-independent signal that the compile/host tax is gone from
+the warm path (CI gates it through bench_smoke's speedups dict).
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.fig4_coding_times import _run_snippet
+from benchmarks.util import emit
+
+THROUGHPUT_SNIPPET = r"""
+import json, time
+import numpy as np
+import jax
+from repro.core import gf, rapidraid as rr
+from repro.storage import chain, multi, repair as rep
+
+n, k, l, nc, nwords, b_obj, reps = {n}, {k}, {l}, {nc}, {nwords}, {b_obj}, {reps}
+code = rr.make_code(n, k, l=l, seed=0)
+rng = np.random.default_rng(0)
+data = rng.integers(0, 1 << l, size=(k, nwords)).astype(gf.WORD_DTYPE[l])
+objs = rng.integers(0, 1 << l,
+                    size=(b_obj, k, nwords)).astype(gf.WORD_DTYPE[l])
+cw = rr.encode_np(code, data)
+ids = list(range(1, k + 2))
+missing = [0]
+alive = [i for i in range(n) if i not in missing]
+obj_bytes = data.nbytes
+
+def cold_warm(fn):
+    t0 = time.perf_counter(); np.asarray(fn())
+    cold = time.perf_counter() - t0
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter(); np.asarray(fn())
+        ts.append(time.perf_counter() - t0)
+    return cold, sorted(ts)[len(ts) // 2]
+
+out = {{}}
+for name, fn in [
+    ("encode", lambda: chain.pipelined_encode(code, data, num_chunks=nc)),
+    ("decode", lambda: chain.pipelined_decode(code, ids, cw[ids],
+                                              num_chunks=nc)),
+    ("repair", lambda: rep.pipelined_repair(code, alive, cw[alive], missing,
+                                            num_chunks=nc)),
+]:
+    cold, warm = cold_warm(fn)
+    out[name] = {{"cold_s": round(cold, 4), "warm_s": round(warm, 5),
+                  "warm_MBps": round(obj_bytes / warm / 1e6, 2),
+                  "speedup": round(cold / warm, 1)}}
+cold, warm = cold_warm(lambda: multi.pipelined_encode_many(
+    code, objs, num_chunks=nc))
+out["encode_many"] = {{"cold_s": round(cold, 4), "warm_s": round(warm, 5),
+                       "warm_MBps": round(b_obj * obj_bytes / warm / 1e6, 2),
+                       "objects_per_s": round(b_obj / warm, 1),
+                       "speedup": round(cold / warm, 1)}}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def real_throughput(n: int = 8, k: int = 4, l: int = 16, nwords: int = 8192,
+                    nc: int = 4, b_obj: int = 4, reps: int = 5) -> dict:
+    """Run the cold/warm sweep in a subprocess with n XLA host devices."""
+    line = _run_snippet(
+        THROUGHPUT_SNIPPET.format(n=n, k=k, l=l, nc=nc, nwords=nwords,
+                                  b_obj=b_obj, reps=reps), ndev=n)
+    out = json.loads(line[len("RESULT "):])
+    out["meta"] = {"n": n, "k": k, "l": l, "nwords": nwords, "nc": nc,
+                   "b_obj": b_obj}
+    return out
+
+
+def main(smoke: bool = False) -> None:
+    print("== Warm-path throughput: cold (compile) vs warm (cached) ==")
+    nwords = 2048 if smoke else 16384
+    try:
+        r = real_throughput(nwords=nwords)
+    except Exception as e:  # noqa: BLE001
+        print(f"  SKIPPED ({e})")
+        return
+    meta = r.pop("meta")
+    print(f"-- ({meta['n']},{meta['k']}) l={meta['l']}, "
+          f"{meta['nwords']} words/block, {meta['nc']} chunks, "
+          f"{meta['b_obj']}-object batch")
+    for name, row in r.items():
+        extra = (f"  {row['objects_per_s']:7.1f} obj/s"
+                 if "objects_per_s" in row else "")
+        print(f"  {name:12s} cold {row['cold_s']*1e3:8.1f} ms   warm "
+              f"{row['warm_s']*1e3:7.2f} ms   {row['warm_MBps']:7.1f} MB/s"
+              f"   ({row['speedup']:.0f}x){extra}")
+        emit("throughput", {"op": name, **row})
+
+
+if __name__ == "__main__":
+    main()

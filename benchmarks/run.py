@@ -7,6 +7,7 @@
   fig_repair_times    (beyond paper) star vs pipelined repair times
   fig5_congestion     Fig. 5    coding times under congestion
   fig_hetero          §V trend  heterogeneous cluster: scheduler vs naive
+  fig_throughput      (beyond paper) warm-path cold/warm latency + MB/s
   roofline            EXPERIMENTS.md roofline table from dry-run artifacts
 
 ``python -m benchmarks.run [--only name]``
@@ -19,7 +20,8 @@ import traceback
 
 from benchmarks import (chain_tuning, fig3_dependencies, fig4_coding_times,
                         fig5_congestion, fig_hetero, fig_repair_times,
-                        roofline, table1_resilience, table2_cpu_cost)
+                        fig_throughput, roofline, table1_resilience,
+                        table2_cpu_cost)
 
 MODULES = [
     ("table1_resilience", table1_resilience),
@@ -29,6 +31,7 @@ MODULES = [
     ("fig_repair_times", fig_repair_times),
     ("fig5_congestion", fig5_congestion),
     ("fig_hetero", fig_hetero),
+    ("fig_throughput", fig_throughput),
     ("chain_tuning", chain_tuning),
     ("roofline", roofline),
 ]

@@ -210,6 +210,18 @@ def bitplane_consts(c: int, l: int) -> list[int]:
     return [gf_mul_scalar(c, 1 << j, l) for j in range(l)]
 
 
+def bitplane_table(M, l: int) -> np.ndarray:
+    """Vectorized ``bitplane_consts`` over a whole coefficient array.
+
+    (...,) GF(2^l) coefficients -> (..., l) uint32 with
+    ``out[..., j] = M[...] * alpha^j`` — one table-lookup broadcast instead
+    of a Python loop per (coefficient, bit) pair.
+    """
+    M = np.asarray(M, dtype=np.int64)
+    pows = np.asarray([1 << j for j in range(l)], dtype=np.int64)
+    return gf_mul_np(M[..., None], pows, l).astype(np.uint32)
+
+
 def gf_mul_const_packed(xp: jax.Array, c: int, l: int) -> jax.Array:
     """Multiply packed words by static coefficient c; pure shift/mask/mul/xor.
 

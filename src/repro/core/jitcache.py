@@ -1,0 +1,78 @@
+"""Shared compiled-program cache for the warm archival fast path.
+
+Every distributed entry point in ``repro.storage`` (pipelined encode /
+decode / repair, their staggered multi-object variants, and the classical
+baseline) runs as one jitted ``shard_map`` program. Before this cache each
+call rebuilt ``jax.jit(compat.shard_map(closure))`` from a FRESH closure, so
+jax's own jit cache — which keys on function identity — missed every time
+and the whole program was retraced and recompiled per invocation. Archival
+is a high-volume background workload (XORing Elephants, PAPERS.md): the
+per-object constant tax dominates fleet cost long before the modeled
+pipeline wins show up.
+
+The fix is structural, not a bigger jit cache: builders construct the jitted
+program ONCE per logical key
+
+    (entry point, code, mesh, shapes, num_chunks, direction, ...)
+
+and this module memoizes the resulting callable. Because the SAME callable
+object is returned on every warm call, jax's jit cache then guarantees no
+retrace for identical input shapes — ``compile_counts`` exposes the per-key
+trace counts so tests can assert exactly that.
+
+The cache is unbounded by design: an archival fleet runs a handful of code
+geometries and bucketed block lengths (``storage.archive`` already groups
+batches by ``block_bytes``), so the key population is small and every entry
+is a warm path worth keeping. Callers feeding genuinely unbounded shape
+diversity should bucket/pad shapes upstream — one program per bucket — or
+call ``clear()`` at their own epoch boundaries.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+_programs: dict[Any, Callable] = {}
+_stats = {"hits": 0, "misses": 0}
+
+
+def get(key: Any, builder: Callable[[], Callable]) -> Callable:
+    """Return the compiled program for ``key``, building it on first use.
+
+    ``key`` must be hashable and must capture everything the built program
+    closes over statically (code, mesh, static shapes, chunk count,
+    direction); ``builder`` is invoked only on a miss.
+    """
+    try:
+        fn = _programs[key]
+    except KeyError:
+        _stats["misses"] += 1
+        fn = _programs[key] = builder()
+        return fn
+    _stats["hits"] += 1
+    return fn
+
+
+def stats() -> dict[str, int]:
+    """Cache hit/miss/size counters (process-wide)."""
+    return {**_stats, "size": len(_programs)}
+
+
+def compile_counts() -> dict[str, int]:
+    """Per-program jit-cache sizes: {key: number of traced signatures}.
+
+    A warm entry point called twice with identical shapes must show 1 here —
+    the trace-count regression tests assert it. Programs without jax's
+    ``_cache_size`` introspection (plain callables) report -1.
+    """
+    out = {}
+    for key, fn in _programs.items():
+        size = getattr(fn, "_cache_size", None)
+        out[repr(key)] = int(size()) if callable(size) else -1
+    return out
+
+
+def clear() -> None:
+    """Drop every cached program and reset the counters (tests only)."""
+    _programs.clear()
+    _stats["hits"] = 0
+    _stats["misses"] = 0

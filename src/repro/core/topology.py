@@ -34,6 +34,7 @@ fluid model in ``benchmarks/netsim.py``):
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -161,6 +162,25 @@ def node_cost(topo: Topology, i: int) -> float:
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=None)
+def _calibration_kernel(l: int):
+    """Jitted packed GF combine shared by every calibration call.
+
+    Hoisted out of ``measure_compute_rates``: a fresh ``jax.jit(lambda ...)``
+    per call misses jax's jit cache (it keys on function identity), so every
+    calibration retraced and recompiled the combine. One cached callable per
+    field size keeps repeat calibrations compile-free (jit still compiles
+    per input shape, once).
+    """
+    import jax
+
+    from repro.core import gf
+
+    rng = np.random.default_rng(0)
+    coeffs = rng.integers(1, 1 << l, size=(1, 2))
+    return jax.jit(lambda xp: gf.gf_matvec_packed(coeffs, xp, l))
+
+
 def measure_compute_rates(l: int = 16, nwords: int = 1 << 15,
                           iters: int = 3, devices=None) -> list[float]:
     """Micro-benchmark: bytes/s of the packed GF combine on every device.
@@ -180,13 +200,12 @@ def measure_compute_rates(l: int = 16, nwords: int = 1 << 15,
 
     devices = list(devices if devices is not None else jax.devices())
     rng = np.random.default_rng(0)
-    coeffs = rng.integers(1, 1 << l, size=(1, 2))
     data = rng.integers(0, 1 << l,
                         size=(2, nwords)).astype(gf.WORD_DTYPE[l])
     packed_host = np.asarray(gf.pack_u32(jnp.asarray(data), l))
     nbytes = data.nbytes
 
-    fn = jax.jit(lambda xp: gf.gf_matvec_packed(coeffs, xp, l))
+    fn = _calibration_kernel(l)
     rates = []
     for dev in devices:
         xp = jax.device_put(jnp.asarray(packed_host), dev)

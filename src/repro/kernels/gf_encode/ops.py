@@ -38,6 +38,20 @@ def pick_block(Bp: int, preferred: int = kernel.DEFAULT_BLOCK) -> int:
     return b
 
 
+def pick_tick_block(S: int, preferred: int = kernel.DEFAULT_BLOCK) -> int:
+    """Tile width for the per-tick pipeline kernels (chunk length ``S``).
+
+    The tick kernels (``chain_step``/``repair_step``) run inside a scanned
+    pipeline, so padding per tick is off the table: the tile must DIVIDE the
+    chunk. Long aligned chunks tile at ``preferred``; anything ragged runs
+    as one whole-chunk tile (fine under interpret, and on TPU a chunk is a
+    block/num_chunks slice — VMEM-sized by construction).
+    """
+    if S % preferred == 0:
+        return preferred
+    return S
+
+
 def _pad_tail(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
     """Zero-pad the last axis up to a tile multiple (GF-safe: 0 encodes to 0)."""
     pad = -x.shape[-1] % multiple

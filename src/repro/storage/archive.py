@@ -86,13 +86,15 @@ def hot_save(store: NodeStore, step: int, blocks: np.ndarray,
     place = rapidraid.placement(acfg.n, acfg.k)
     k, B = blocks.shape
     assert k == acfg.k
+    # serialize each block ONCE: every replica put and the digest reuse it
+    blobs = [blocks[j].tobytes() for j in range(k)]
     for node, held in enumerate(place):
         for j in held:
-            store.put(node, HOT.format(step=step, j=j), blocks[j].tobytes())
+            store.put(node, HOT.format(step=step, j=j), blobs[j])
     manifest = {
         "step": step, "tier": "hot", "n": acfg.n, "k": acfg.k, "l": acfg.l,
         "seed": acfg.seed, "block_bytes": int(B),
-        "digests": [digest(blocks[j].tobytes()) for j in range(k)],
+        "digests": [digest(b) for b in blobs],
         "placement": [list(h) for h in place],
     }
     _put_manifest(store, step, manifest)
@@ -203,10 +205,11 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
         coded_w, _ = rapidraid.pipeline_encode_local(
             code, np.asarray(data_w), num_chunks=nc)
     coded = _u8(coded_w)
+    coded_blobs = [coded[i].tobytes() for i in range(acfg.n)]
 
     for pos in range(acfg.n):
         store.put(int(perm[pos]), ARC.format(step=step, i=pos),
-                  coded[pos].tobytes())
+                  coded_blobs[pos])
     # drop the hot replicas (the actual capacity saving: 2x -> n/k)
     for node, held in enumerate(manifest["placement"]):
         for j in held:
@@ -215,7 +218,7 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
     manifest = {
         **manifest, "tier": "archive",
         "perm": [int(p) for p in perm],
-        "coded_digests": [digest(coded[i].tobytes()) for i in range(acfg.n)],
+        "coded_digests": [digest(b) for b in coded_blobs],
         "orig_digests": manifest["digests"],
     }
     if sched is not None:
@@ -254,9 +257,10 @@ def _archive_group(store: NodeStore, grp: list[int], acfg: ArchiveConfig,
     out: dict[int, dict] = {}
     for b, step in enumerate(grp):
         coded = _u8(coded_w[b])
+        coded_blobs = [coded[i].tobytes() for i in range(acfg.n)]
         for pos in range(acfg.n):
             store.put(int(perm[pos]), ARC.format(step=step, i=pos),
-                      coded[pos].tobytes())
+                      coded_blobs[pos])
         manifest = manifests[step]
         for node, held in enumerate(manifest["placement"]):
             for j in held:
@@ -264,8 +268,7 @@ def _archive_group(store: NodeStore, grp: list[int], acfg: ArchiveConfig,
         manifest = {
             **manifest, "tier": "archive",
             "perm": [int(p) for p in perm],
-            "coded_digests": [digest(coded[i].tobytes())
-                              for i in range(acfg.n)],
+            "coded_digests": [digest(b) for b in coded_blobs],
             "orig_digests": manifest["digests"],
             "batched_with": [int(s) for s in grp],
         }
@@ -345,15 +348,15 @@ def archive_classical(store: NodeStore, step: int, acfg: ArchiveConfig) -> dict:
     code = classical.make_code(acfg.n, acfg.k, l=acfg.l)
     parity_w = classical.encode_np(code, _words(blocks, acfg.l))
     coded = np.concatenate([blocks, _u8(parity_w)], axis=0)
+    coded_blobs = [coded[i].tobytes() for i in range(acfg.n)]
     for i in range(acfg.n):
-        store.put(i, ARC.format(step=step, i=i), coded[i].tobytes())
+        store.put(i, ARC.format(step=step, i=i), coded_blobs[i])
     for node, held in enumerate(manifest["placement"]):
         for j in held:
             store.delete(node, HOT.format(step=step, j=j))
     manifest = {**manifest, "tier": "archive_classical",
                 "perm": list(range(acfg.n)),
-                "coded_digests": [digest(coded[i].tobytes())
-                                  for i in range(acfg.n)],
+                "coded_digests": [digest(b) for b in coded_blobs],
                 "orig_digests": manifest["digests"]}
     _put_manifest(store, step, manifest)
     return manifest

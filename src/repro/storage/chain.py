@@ -8,9 +8,17 @@ through the software pipeline (``repro.core.pipeline``), so wall time behaves
 like Eq. (2): T = tau_block + (n-1) * tau_chunk.
 
 GF multiplies use the packed bit-plane formulation with *per-device traced*
-coefficients: the host precomputes the per-bit constants c * alpha^j for every
-(node, slot, bit), ships them as a sharded (n, max_b, l) uint32 array, and the
-device loop is pure shift/mask/mul/xor — no gathers, TPU-VPU friendly.
+coefficients: the per-bit constants c * alpha^j for every (node, slot, bit)
+ship as a sharded (n, max_b, l) uint32 array, and the per-tick step runs as
+ONE fused Pallas launch per chunk (``repro.kernels.gf_encode``) — pure
+shift/mask/mul/xor over the tile grid, no gathers, TPU-VPU friendly.
+
+Warm fast path: every entry point compiles exactly one program per
+``(code, mesh, shape, num_chunks)`` key through ``repro.core.jitcache``;
+replica placement and uint32 lane packing happen INSIDE that program, so on
+warm calls the input words cross to the devices once and everything else —
+placement gather, packing, the chain pipeline, unpacking — is the cached
+executable.
 """
 from __future__ import annotations
 
@@ -20,9 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import compat, gf, pipeline
+from repro.core import compat, gf, jitcache, pipeline
 from repro.core.rapidraid import RapidRAIDCode
 
 AXIS = "chain"
@@ -34,109 +42,148 @@ def column_bitplanes(M: np.ndarray, l: int) -> np.ndarray:
     (rows, cols) M -> (cols, rows, l) uint32 with
     ``out[c, r, b] = M[r, c] * alpha^b``: chain node c applies column c of M
     to its local stream — the layout pipelined decode and pipelined repair
-    ship to the devices.
+    ship to the devices. One vectorized table op, no Python coefficient loop.
     """
     M = np.asarray(M)
-    rows, cols = M.shape
-    out = np.zeros((cols, rows, l), dtype=np.uint32)
-    for c in range(cols):
-        for r in range(rows):
-            v = int(M[r, c])
-            if v:
-                out[c, r] = gf.bitplane_consts(v, l)
-    return out
+    return gf.bitplane_table(M.T, l)
 
 
+@functools.lru_cache(maxsize=None)
 def bitplane_coeff_planes(code: RapidRAIDCode) -> tuple[np.ndarray, np.ndarray]:
-    """(bp_psi, bp_xi), each (n, max_b, l) uint32 with bp[i,s,j] = coef*alpha^j."""
+    """(bp_psi, bp_xi), each (n, max_b, l) uint32 with bp[i,s,j] = coef*alpha^j.
+
+    Cached per code: the planes are a pure function of the (hashable) code
+    and every encode entry point needs them, so they are built once per
+    process instead of once per call/trace.
+    """
     sched = code.chain
-    l = code.l
-    bp_psi = np.zeros((code.n, sched.max_blocks, l), dtype=np.uint32)
-    bp_xi = np.zeros_like(bp_psi)
-    for i in range(code.n):
-        for s in range(sched.max_blocks):
-            for j in range(l):
-                a = 1 << j
-                bp_psi[i, s, j] = gf.gf_mul_scalar(int(sched.psi[i, s]), a, l)
-                bp_xi[i, s, j] = gf.gf_mul_scalar(int(sched.xi[i, s]), a, l)
+    bp_psi = gf.bitplane_table(sched.psi, code.l)
+    bp_xi = gf.bitplane_table(sched.xi, code.l)
+    bp_psi.setflags(write=False)   # shared cached copies — freeze them
+    bp_xi.setflags(write=False)
     return bp_psi, bp_xi
 
 
-def build_local_blocks(code: RapidRAIDCode, data: np.ndarray) -> np.ndarray:
-    """Replica placement: (n, max_b, B) words; padded slots are zero."""
+@functools.lru_cache(maxsize=None)
+def placement_indices(code: RapidRAIDCode) -> tuple[np.ndarray, np.ndarray]:
+    """Static gather spec for replica placement: (idx, valid), both (n, max_b).
+
+    ``local[i, s] = data[idx[i, s]] if valid[i, s] else 0`` — the whole
+    placement becomes one XLA gather inside the jitted encode program.
+    """
     sched = code.chain
-    B = data.shape[1]
-    out = np.zeros((code.n, sched.max_blocks, B), dtype=gf.WORD_DTYPE[code.l])
-    for i in range(code.n):
-        for s in range(sched.max_blocks):
-            if sched.block_valid[i, s]:
-                out[i, s] = data[sched.local_blocks[i, s]]
-    return out
+    idx = sched.local_blocks.astype(np.int32)
+    valid = sched.block_valid.copy()
+    idx.setflags(write=False)      # shared cached copies — freeze them
+    valid.setflags(write=False)
+    return idx, valid
 
 
-def _chain_step(local, bp_psi, bp_xi, S, l, num_chunks):
-    """Returns the per-chunk step_fn closed over this device's blocks/coeffs."""
-    max_b = local.shape[0]
-    lsb = jnp.uint32(gf.LSB_MASK[l])
+def build_local_blocks(code: RapidRAIDCode, data: np.ndarray) -> np.ndarray:
+    """Replica placement: (n, max_b, B) words; padded slots are zero.
 
-    def step_fn(wire_in, out, ch, active):
-        c = wire_in
-        xo = wire_in
-        for s in range(max_b):
-            chunk = lax.dynamic_slice(local[s], (ch * S,), (S,))
-            for j in range(l):
-                m = (chunk >> j) & lsb
-                c = c ^ (m * bp_xi[s, j])
-                xo = xo ^ (m * bp_psi[s, j])
-        cur = lax.dynamic_slice(out, (ch * S,), (S,))
-        out = lax.dynamic_update_slice(out, jnp.where(active, c, cur), (ch * S,))
-        return xo, out
+    Host reference of the in-program placement gather (the jitted encode
+    programs inline ``placement_indices`` instead of calling this).
+    """
+    idx, valid = placement_indices(code)
+    data = np.asarray(data)
+    return np.where(valid[:, :, None], data[idx], 0).astype(data.dtype)
 
-    return step_fn
+
+def _tick_kernel_args(S: int):
+    """(kernel ops module, tile width) for a per-tick fused launch."""
+    from repro.kernels.gf_encode import ops as kernel_ops
+    return kernel_ops, kernel_ops.pick_tick_block(S)
 
 
 def _encode_shard(local, bp_psi, bp_xi, *, l: int, num_chunks: int):
-    """Body run per device under shard_map. local (1,max_b,Bp) -> out (1,Bp)."""
+    """Body run per device under shard_map. local (1,max_b,Bp) -> out (1,Bp).
+
+    The per-tick step is the fused Pallas ``chain_step`` kernel: one launch
+    consumes the incoming wire chunk and produces BOTH the kept codeword
+    chunk (xi path) and the forwarded wire (psi path) over the tile grid.
+    """
     local = local[0]
     bp_psi = bp_psi[0]
     bp_xi = bp_xi[0]
-    Bp = local.shape[-1]
+    max_b, Bp = local.shape
     S = Bp // num_chunks
-    step = _chain_step(local, bp_psi, bp_xi, S, l, num_chunks)
+    kernel_ops, blk = _tick_kernel_args(S)
+
+    def step_fn(wire_in, out, ch, active):
+        chunk = lax.dynamic_slice(local, (0, ch * S), (max_b, S))
+        c, xo = kernel_ops.chain_step(wire_in[None], chunk, bp_psi, bp_xi, l,
+                                      block=blk)
+        cur = lax.dynamic_slice(out, (ch * S,), (S,))
+        out = lax.dynamic_update_slice(out, jnp.where(active, c[0], cur),
+                                       (ch * S,))
+        return xo[0], out
+
     out = pipeline.software_pipeline(
-        step, jnp.zeros((S,), jnp.uint32), jnp.zeros((Bp,), jnp.uint32),
+        step_fn, jnp.zeros((S,), jnp.uint32), jnp.zeros((Bp,), jnp.uint32),
         num_chunks, AXIS)
     return out[None]
 
 
-def make_chain_mesh(n: int, order=None) -> Mesh:
-    """Chain mesh of n devices; ``order[p]`` is the device playing chain
-    position p (heterogeneity-aware placement, ``repro.core.scheduler``).
-    Default: device p plays position p."""
+@functools.lru_cache(maxsize=None)
+def _chain_mesh(n: int, order: tuple[int, ...] | None) -> Mesh:
     devs = jax.devices()
     if len(devs) < n:
         raise ValueError(f"need {n} devices for an n={n} chain, have {len(devs)}")
     if order is None:
         return Mesh(np.asarray(devs[:n]), (AXIS,))
-    order = [int(i) for i in order]
     if sorted(set(order)) != sorted(order) or len(order) != n:
-        raise ValueError(f"order must be {n} distinct device ids, got {order}")
+        raise ValueError(f"order must be {n} distinct device ids, got {list(order)}")
     if max(order) >= len(devs):
         raise ValueError(f"order references device {max(order)}, "
                          f"have {len(devs)}")
     return Mesh(np.asarray([devs[i] for i in order]), (AXIS,))
 
 
-@functools.partial(jax.jit, static_argnames=("code", "num_chunks", "mesh"))
-def _encode_jit(locals_packed, code: RapidRAIDCode, num_chunks: int, mesh: Mesh):
+def make_chain_mesh(n: int, order=None) -> Mesh:
+    """Chain mesh of n devices; ``order[p]`` is the device playing chain
+    position p (heterogeneity-aware placement, ``repro.core.scheduler``).
+    Default: device p plays position p. Meshes are memoized so repeated
+    calls return the SAME object and downstream program caches key cheaply.
+    """
+    if order is not None:
+        order = tuple(int(i) for i in order)
+    return _chain_mesh(n, order)
+
+
+def _check_chunking(B: int, l: int, num_chunks: int, what: str) -> None:
+    lanes = gf.LANES[l]
+    if num_chunks < 1:
+        raise ValueError(f"{what}: num_chunks must be >= 1, got {num_chunks}")
+    if B % (lanes * num_chunks):
+        if num_chunks == 1:
+            raise ValueError(
+                f"{what}: block length {B} must be whole uint32 lanes "
+                f"({lanes} GF(2^{l}) words each)")
+        raise ValueError(
+            f"{what}: block length {B} must divide into {num_chunks} chunks "
+            f"of whole uint32 lanes ({lanes} GF(2^{l}) words each)")
+
+
+def _build_encode(code: RapidRAIDCode, mesh: Mesh, num_chunks: int):
+    """One compiled program: words (k, B) -> codeword words (n, B), sharded."""
+    l = code.l
+    idx, valid = placement_indices(code)
     bp_psi, bp_xi = bitplane_coeff_planes(code)
-    fn = compat.shard_map(
-        functools.partial(_encode_shard, l=code.l, num_chunks=num_chunks),
-        mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS), P(AXIS)),
-        out_specs=P(AXIS),
-    )
-    return fn(locals_packed, jnp.asarray(bp_psi), jnp.asarray(bp_xi))
+    body = functools.partial(_encode_shard, l=l, num_chunks=num_chunks)
+    fn = compat.shard_map(body, mesh=mesh,
+                          in_specs=(P(AXIS), P(AXIS), P(AXIS)),
+                          out_specs=P(AXIS))
+    idx_j = jnp.asarray(idx)
+    valid_j = jnp.asarray(valid[:, :, None])
+    planes = (jnp.asarray(bp_psi), jnp.asarray(bp_xi))
+
+    @jax.jit
+    def program(data):
+        local = jnp.where(valid_j, data[idx_j], 0)      # (n, max_b, B)
+        out_packed = fn(gf.pack_u32(local, l), *planes)  # (n, Bp)
+        return gf.unpack_u32(out_packed, l)
+    return program
 
 
 def pipelined_encode(code: RapidRAIDCode, data, num_chunks: int = 8,
@@ -147,24 +194,68 @@ def pipelined_encode(code: RapidRAIDCode, data, num_chunks: int = 8,
     post-encode scatter, exactly the paper's pipelined scheme. ``order``
     (scheduler placement) assigns device ``order[p]`` to chain position p;
     row p of the result lives on that device.
+
+    Warm path: one cached executable per (code, mesh, B, num_chunks) —
+    placement, packing, pipeline, and unpacking all inside it, so repeat
+    calls neither retrace nor touch the host beyond the input transfer.
     """
     data = np.asarray(data)
-    assert data.shape[0] == code.k
+    if data.ndim != 2 or data.shape[0] != code.k:
+        raise ValueError(
+            f"pipelined_encode: data {data.shape} must be (k={code.k}, B)")
+    _check_chunking(data.shape[1], code.l, num_chunks, "pipelined_encode")
     if mesh is not None and order is not None:
         raise ValueError("pass either mesh or order, not both")
     mesh = mesh or make_chain_mesh(code.n, order)
-    local = build_local_blocks(code, data)
-    lanes = gf.LANES[code.l]
-    assert data.shape[1] % (lanes * num_chunks) == 0, (
-        f"block length {data.shape[1]} must divide into {num_chunks} chunks of "
-        f"whole uint32 lanes ({lanes} words each)")
-    local_packed = np.asarray(
-        gf.pack_u32(jnp.asarray(local.reshape(-1, data.shape[1])), code.l)
-    ).reshape(code.n, -1, data.shape[1] // lanes)
-    sharding = NamedSharding(mesh, P(AXIS))
-    local_packed = jax.device_put(jnp.asarray(local_packed), sharding)
-    out_packed = _encode_jit(local_packed, code, num_chunks, mesh)
-    return gf.unpack_u32(out_packed, code.l)
+    fn = jitcache.get(
+        ("encode", code, mesh, data.shape[1], num_chunks),
+        lambda: _build_encode(code, mesh, num_chunks))
+    return fn(data)
+
+
+def _decode_shard(local, bp_node, *, k: int, l: int, num_chunks: int):
+    """Per-device decode body: the wire carries k running partial outputs and
+    each node fuses its column of D via one ``repair_step`` kernel launch
+    per tick (a GF inner-product accumulation over the tile grid)."""
+    local = local[0]          # (Bp,)
+    planes = bp_node[0]       # (k, l)
+    Bp = local.shape[-1]
+    S = Bp // num_chunks
+    kernel_ops, blk = _tick_kernel_args(S)
+
+    def step_fn(wire_in, out, ch, active):
+        chunk = lax.dynamic_slice(local, (ch * S,), (S,))
+        acc = kernel_ops.repair_step(wire_in, chunk[None], planes, l,
+                                     block=blk)
+        cur = lax.dynamic_slice(out, (0, ch * S), (k, S))
+        out = lax.dynamic_update_slice(
+            out, jnp.where(active, acc, cur), (0, ch * S))
+        return acc, out
+
+    out = pipeline.software_pipeline(
+        step_fn, jnp.zeros((k, S), jnp.uint32),
+        jnp.zeros((k, Bp), jnp.uint32), num_chunks, AXIS)
+    return out[None]
+
+
+def _build_decode(code: RapidRAIDCode, ids: tuple[int, ...], mesh: Mesh,
+                  num_chunks: int):
+    """One compiled program: survivor words (n_alive, B) -> object (k, B)."""
+    from repro.core import rapidraid as rr_lib
+    l = code.l
+    D = rr_lib.decode_matrix(code, list(ids))       # (k, n_alive), host, once
+    bp = jnp.asarray(column_bitplanes(D, l))        # (n_alive, k, l)
+    body = functools.partial(_decode_shard, k=code.k, l=l,
+                             num_chunks=num_chunks)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
+                          out_specs=P(AXIS))
+
+    @jax.jit
+    def program(shards):
+        outs = fn(gf.pack_u32(shards, l), bp)       # (n_alive, k, Bp)
+        # the LAST chain node holds the complete decoded object
+        return gf.unpack_u32(outs[-1], l)
+    return program
 
 
 def pipelined_decode(code: RapidRAIDCode, ids, shards, num_chunks: int = 8,
@@ -176,61 +267,24 @@ def pipelined_decode(code: RapidRAIDCode, ids, shards, num_chunks: int = 8,
     decode matrix there — the same star bottleneck as classical encode.
     Here the len(ids) shard-holding nodes form a chain; the wire carries
     the k running partial output blocks, and node i adds D[:, i] * c_i
-    (packed bit-plane multiplies) as the stream passes. Total traffic is
+    (fused bit-plane kernel ticks) as the stream passes. Total traffic is
     k x (n_alive - 1) chunks spread over the chain links instead of
     k x n_alive through one NIC, and every node finishes with the decoded
-    prefix resident — the dual of the encode chain.
+    prefix resident — the dual of the encode chain. The decode matrix and
+    the compiled program are cached per (code, ids, mesh, shapes).
     """
-    from repro.core import rapidraid as rr_lib
-    ids = list(ids)
+    ids = tuple(int(i) for i in ids)
     shards = np.asarray(shards)
-    n_alive, B = shards.shape
-    assert n_alive == len(ids)
-    D = rr_lib.decode_matrix(code, ids)            # (k, n_alive)
-    l = code.l
-    lanes = gf.LANES[l]
-    assert B % (lanes * num_chunks) == 0
-    mesh = mesh or make_chain_mesh(n_alive)
-
-    # per-node bit-plane constants for its column of D: (n_alive, k, l)
-    bp = column_bitplanes(D, l)
-
-    shards_packed = np.asarray(gf.pack_u32(jnp.asarray(shards), l))
-    Bp = shards_packed.shape[1]
-    S = Bp // num_chunks
-    lsb = jnp.uint32(gf.LSB_MASK[l])
-    k = code.k
-
-    def shard_body(local, bp_node):
-        local = local[0]          # (Bp,)
-        planes = bp_node[0]       # (k, l)
-
-        def step_fn(wire_in, out, ch, active):
-            chunk = lax.dynamic_slice(local, (ch * S,), (S,))
-            acc = wire_in         # (k, S) running partial outputs
-            for b in range(l):
-                m = (chunk >> b) & lsb
-                acc = acc ^ (m[None, :] * planes[:, b][:, None])
-            cur = lax.dynamic_slice(out, (0, ch * S), (k, S))
-            out = lax.dynamic_update_slice(
-                out, jnp.where(active, acc, cur), (0, ch * S))
-            return acc, out
-
-        out = pipeline.software_pipeline(
-            step_fn, jnp.zeros((k, S), jnp.uint32),
-            jnp.zeros((k, Bp), jnp.uint32), num_chunks, AXIS)
-        return out[None]
-
-    fn = jax.jit(compat.shard_map(
-        shard_body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
-        out_specs=P(AXIS)))
-    sharding_ = NamedSharding(mesh, P(AXIS))
-    outs = fn(jax.device_put(jnp.asarray(shards_packed[:, None, :]
-                                         .reshape(n_alive, Bp)), sharding_),
-              jax.device_put(jnp.asarray(bp), sharding_))
-    # the LAST chain node holds the complete decoded object
-    decoded_packed = outs[-1]
-    return gf.unpack_u32(decoded_packed, l)
+    if shards.ndim != 2 or shards.shape[0] != len(ids):
+        raise ValueError(
+            f"pipelined_decode: shards {shards.shape} must be "
+            f"(len(ids)={len(ids)}, B)")
+    _check_chunking(shards.shape[1], code.l, num_chunks, "pipelined_decode")
+    mesh = mesh or make_chain_mesh(len(ids))
+    fn = jitcache.get(
+        ("decode", code, ids, mesh, shards.shape[1], num_chunks),
+        lambda: _build_decode(code, ids, mesh, num_chunks))
+    return fn(shards)
 
 
 def order_chain(node_speeds: np.ndarray, n: int, k: int) -> np.ndarray:

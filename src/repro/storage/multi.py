@@ -20,6 +20,11 @@ tick — the right choice when the nodes, not the links, are the bottleneck.
 Data layout mirrors ``repro.storage.chain`` with a leading object axis:
 replica blocks (n, B_obj, max_b, Bp) sharded over the chain axis, coded
 output (n, B_obj, Bp) materializing each object's row i on device i.
+
+Warm fast path: as in ``repro.storage.chain``, each entry point is one
+cached executable per (code, mesh, batch, shape, num_chunks, stagger) key
+(``repro.core.jitcache``) with placement + packing inside the program, and
+the per-tick step is the fused Pallas kernel vmapped over the object window.
 """
 from __future__ import annotations
 
@@ -29,9 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.core import compat, gf, pipeline
+from repro.core import compat, gf, jitcache, pipeline
 from repro.core.rapidraid import RapidRAIDCode
 from repro.storage import chain as chain_lib
 
@@ -40,28 +45,28 @@ AXIS = chain_lib.AXIS
 
 def _encode_many_shard(local, bp_psi, bp_xi, *, l: int, num_chunks: int,
                        stagger: int):
-    """Per-device body. local (1, B_obj, max_b, Bp) -> out (1, B_obj, Bp)."""
+    """Per-device body. local (1, B_obj, max_b, Bp) -> out (1, B_obj, Bp).
+
+    Each (object, tick) step is one fused Pallas ``chain_step`` launch; the
+    staggered scheduler vmaps it over the sliding object window, which rides
+    the kernel's object grid axis.
+    """
     local = local[0]
     bp_psi = bp_psi[0]
     bp_xi = bp_xi[0]
     B_obj, max_b, Bp = local.shape
     S = Bp // num_chunks
-    lsb = jnp.uint32(gf.LSB_MASK[l])
+    kernel_ops, blk = chain_lib._tick_kernel_args(S)
 
     def step_fn(wire_b, out_b, b, ch, active):
         """One object's chunk: wire_b (S,), out_b (Bp,), b/ch traced."""
         loc = lax.dynamic_slice(local, (b, 0, ch * S), (1, max_b, S))[0]
-        c = wire_b
-        xo = wire_b
-        for s in range(max_b):
-            for j in range(l):
-                m = (loc[s] >> j) & lsb
-                c = c ^ (m * bp_xi[s, j])
-                xo = xo ^ (m * bp_psi[s, j])
+        c, xo = kernel_ops.chain_step(wire_b[None], loc, bp_psi, bp_xi, l,
+                                      block=blk)
         cur = lax.dynamic_slice(out_b, (ch * S,), (S,))
         out_b = lax.dynamic_update_slice(
-            out_b, jnp.where(active, c, cur), (ch * S,))
-        return xo, out_b
+            out_b, jnp.where(active, c[0], cur), (ch * S,))
+        return xo[0], out_b
 
     out = pipeline.staggered_pipeline(
         step_fn, jnp.zeros((S,), jnp.uint32),
@@ -70,19 +75,29 @@ def _encode_many_shard(local, bp_psi, bp_xi, *, l: int, num_chunks: int,
     return out[None]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("code", "num_chunks", "stagger", "mesh"))
-def _encode_many_jit(locals_packed, code: RapidRAIDCode, num_chunks: int,
-                     stagger: int, mesh):
+def _build_encode_many(code: RapidRAIDCode, mesh, num_chunks: int,
+                       stagger: int):
+    """One compiled program: (B_obj, k, B) words -> (B_obj, n, B) words."""
+    l = code.l
+    idx, valid = chain_lib.placement_indices(code)
     bp_psi, bp_xi = chain_lib.bitplane_coeff_planes(code)
-    fn = compat.shard_map(
-        functools.partial(_encode_many_shard, l=code.l,
-                          num_chunks=num_chunks, stagger=stagger),
-        mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS), P(AXIS)),
-        out_specs=P(AXIS),
-    )
-    return fn(locals_packed, jnp.asarray(bp_psi), jnp.asarray(bp_xi))
+    body = functools.partial(_encode_many_shard, l=l, num_chunks=num_chunks,
+                             stagger=stagger)
+    fn = compat.shard_map(body, mesh=mesh,
+                          in_specs=(P(AXIS), P(AXIS), P(AXIS)),
+                          out_specs=P(AXIS))
+    idx_j = jnp.asarray(idx)
+    valid_j = jnp.asarray(valid[None, :, :, None])
+    planes = (jnp.asarray(bp_psi), jnp.asarray(bp_xi))
+
+    @jax.jit
+    def program(objects):
+        # replica placement per object, then node-major for the sharding
+        local = jnp.where(valid_j, objects[:, idx_j], 0)  # (B_obj,n,max_b,B)
+        local = local.transpose(1, 0, 2, 3)               # (n,B_obj,max_b,B)
+        out = fn(gf.pack_u32(local, l), *planes)          # (n, B_obj, Bp)
+        return gf.unpack_u32(out.transpose(1, 0, 2), l)
+    return program
 
 
 def pipelined_encode_many(code: RapidRAIDCode, objects, num_chunks: int = 8,
@@ -96,27 +111,65 @@ def pipelined_encode_many(code: RapidRAIDCode, objects, num_chunks: int = 8,
     position p for every chain in the batch.
     """
     objects = np.asarray(objects)
-    B_obj, kk, B = objects.shape
-    assert kk == code.k
+    if objects.ndim != 3 or objects.shape[1] != code.k:
+        raise ValueError(
+            f"pipelined_encode_many: objects {objects.shape} must be "
+            f"(B_obj, k={code.k}, B)")
+    B_obj, _, B = objects.shape
+    chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_encode_many")
     if mesh is not None and order is not None:
         raise ValueError("pass either mesh or order, not both")
     mesh = mesh or chain_lib.make_chain_mesh(code.n, order)
-    lanes = gf.LANES[code.l]
-    assert B % (lanes * num_chunks) == 0, (
-        f"block length {B} must divide into {num_chunks} chunks of whole "
-        f"uint32 lanes ({lanes} words each)")
-    # replica placement per object, then node-major for the chain sharding
-    local = np.stack([chain_lib.build_local_blocks(code, obj)
-                      for obj in objects])          # (B_obj, n, max_b, B)
-    local = local.transpose(1, 0, 2, 3)             # (n, B_obj, max_b, B)
-    local_packed = np.asarray(
-        gf.pack_u32(jnp.asarray(local.reshape(-1, B)), code.l)
-    ).reshape(code.n, B_obj, -1, B // lanes)
-    sharding = NamedSharding(mesh, P(AXIS))
-    local_packed = jax.device_put(jnp.asarray(local_packed), sharding)
-    out_packed = _encode_many_jit(local_packed, code, num_chunks, stagger,
-                                  mesh)             # (n, B_obj, Bp)
-    return gf.unpack_u32(out_packed.transpose(1, 0, 2), code.l)
+    fn = jitcache.get(
+        ("encode_many", code, mesh, B_obj, B, num_chunks, stagger),
+        lambda: _build_encode_many(code, mesh, num_chunks, stagger))
+    return fn(objects)
+
+
+def _decode_many_shard(local, bp_node, *, k: int, l: int, num_chunks: int,
+                       stagger: int):
+    """Per-device body: local (1, B_obj, Bp), planes (1, k, l)."""
+    local = local[0]          # (B_obj, Bp)
+    planes = bp_node[0]       # (k, l)
+    B_obj, Bp = local.shape
+    S = Bp // num_chunks
+    kernel_ops, blk = chain_lib._tick_kernel_args(S)
+
+    def step_fn(wire_b, out_b, b, ch, active):
+        chunk = lax.dynamic_slice(local, (b, ch * S), (1, S))[0]
+        acc = kernel_ops.repair_step(wire_b, chunk[None], planes, l,
+                                     block=blk)
+        cur = lax.dynamic_slice(out_b, (0, ch * S), (k, S))
+        out_b = lax.dynamic_update_slice(
+            out_b, jnp.where(active, acc, cur), (0, ch * S))
+        return acc, out_b
+
+    out = pipeline.staggered_pipeline(
+        step_fn, jnp.zeros((k, S), jnp.uint32),
+        jnp.zeros((B_obj, k, Bp), jnp.uint32), num_chunks, AXIS,
+        num_objects=B_obj, stagger=stagger)
+    return out[None]
+
+
+def _build_decode_many(code: RapidRAIDCode, ids: tuple[int, ...], mesh,
+                       num_chunks: int, stagger: int):
+    """One compiled program: (B_obj, n_alive, B) -> (B_obj, k, B)."""
+    from repro.core import rapidraid as rr_lib
+    l = code.l
+    D = rr_lib.decode_matrix(code, list(ids))       # (k, n_alive), host, once
+    bp = jnp.asarray(chain_lib.column_bitplanes(D, l))
+    body = functools.partial(_decode_many_shard, k=code.k, l=l,
+                             num_chunks=num_chunks, stagger=stagger)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
+                          out_specs=P(AXIS))
+
+    @jax.jit
+    def program(shards):
+        packed = gf.pack_u32(shards, l).transpose(1, 0, 2)  # (n_alive,B_obj,Bp)
+        outs = fn(packed, bp)                       # (n_alive, B_obj, k, Bp)
+        # the LAST chain node holds every object's decoded blocks
+        return gf.unpack_u32(outs[-1], l)
+    return program
 
 
 def pipelined_decode_many(code: RapidRAIDCode, ids, shards,
@@ -129,54 +182,16 @@ def pipelined_decode_many(code: RapidRAIDCode, ids, shards,
     same rows). shards (B_obj, n_alive, B) -> decoded (B_obj, k, B); the
     last chain node finishes holding every object's decoded blocks.
     """
-    from repro.core import rapidraid as rr_lib
-    ids = list(ids)
+    ids = tuple(int(i) for i in ids)
     shards = np.asarray(shards)
-    B_obj, n_alive, B = shards.shape
-    assert n_alive == len(ids)
-    D = rr_lib.decode_matrix(code, ids)             # (k, n_alive)
-    l = code.l
-    k = code.k
-    lanes = gf.LANES[l]
-    assert B % (lanes * num_chunks) == 0
-    mesh = mesh or chain_lib.make_chain_mesh(n_alive)
-
-    # per-node bit-plane constants for its column of D: (n_alive, k, l)
-    bp = chain_lib.column_bitplanes(D, l)
-
-    shards_packed = np.asarray(
-        gf.pack_u32(jnp.asarray(shards.reshape(-1, B)), l)
-    ).reshape(B_obj, n_alive, -1).transpose(1, 0, 2)  # (n_alive, B_obj, Bp)
-    Bp = shards_packed.shape[-1]
-    S = Bp // num_chunks
-    lsb = jnp.uint32(gf.LSB_MASK[l])
-
-    def shard_body(local, bp_node):
-        local = local[0]          # (B_obj, Bp)
-        planes = bp_node[0]       # (k, l)
-
-        def step_fn(wire_b, out_b, b, ch, active):
-            chunk = lax.dynamic_slice(local, (b, ch * S), (1, S))[0]
-            acc = wire_b          # (k, S) running partial outputs
-            for bit in range(l):
-                m = (chunk >> bit) & lsb
-                acc = acc ^ (m[None, :] * planes[:, bit][:, None])
-            cur = lax.dynamic_slice(out_b, (0, ch * S), (k, S))
-            out_b = lax.dynamic_update_slice(
-                out_b, jnp.where(active, acc, cur), (0, ch * S))
-            return acc, out_b
-
-        out = pipeline.staggered_pipeline(
-            step_fn, jnp.zeros((k, S), jnp.uint32),
-            jnp.zeros((B_obj, k, Bp), jnp.uint32), num_chunks, AXIS,
-            num_objects=B_obj, stagger=stagger)
-        return out[None]
-
-    fn = jax.jit(compat.shard_map(
-        shard_body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
-        out_specs=P(AXIS)))
-    sharding = NamedSharding(mesh, P(AXIS))
-    outs = fn(jax.device_put(jnp.asarray(shards_packed), sharding),
-              jax.device_put(jnp.asarray(bp), sharding))
-    # the LAST chain node holds every object's decoded blocks
-    return gf.unpack_u32(outs[-1], l)
+    if shards.ndim != 3 or shards.shape[1] != len(ids):
+        raise ValueError(
+            f"pipelined_decode_many: shards {shards.shape} must be "
+            f"(B_obj, len(ids)={len(ids)}, B)")
+    B_obj, _, B = shards.shape
+    chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_decode_many")
+    mesh = mesh or chain_lib.make_chain_mesh(len(ids))
+    fn = jitcache.get(
+        ("decode_many", code, ids, mesh, B_obj, B, num_chunks, stagger),
+        lambda: _build_decode_many(code, ids, mesh, num_chunks, stagger))
+    return fn(shards)

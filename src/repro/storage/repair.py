@@ -22,7 +22,14 @@ Mapping onto the shared scheduler (``repro.core.pipeline``):
 * the wire carries one (|missing|, S) chunk of partial reconstructions, so
   up to n-k lost shards are repaired in ONE pass over the survivors;
 * B concurrent repairs (e.g. every object archived on a failed node) share
-  one ``shard_map`` launch via the staggered multi-chain scheduler.
+  one ``shard_map`` launch via the staggered multi-chain scheduler;
+* each helper's per-tick contribution is ONE fused Pallas
+  ``repair_step`` launch (the GF inner-product kernel) over the tile grid.
+
+Warm fast path: the repair plan (helpers + coefficient matrix R, a host
+Gaussian elimination) is cached per (code, missing, survivors), and every
+chain program is one cached executable per (code, missing, helpers, mesh,
+shapes) key — packing included — via ``repro.core.jitcache``.
 
 Degraded reads are the zero-materialization special case: a read of object
 bytes that hit lost blocks decodes ONLY the requested word range — each
@@ -32,17 +39,30 @@ pallas kernel).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.core import compat, fault_tolerance, gf, pipeline, rapidraid
+from repro.core import compat, fault_tolerance, gf, jitcache, pipeline, rapidraid
 from repro.core.rapidraid import RapidRAIDCode
 from repro.storage import chain as chain_lib
 
 AXIS = chain_lib.AXIS
+
+
+@functools.lru_cache(maxsize=None)
+def _repair_plan_cached(code: RapidRAIDCode, missing: tuple[int, ...],
+                        ids: tuple[int, ...]):
+    """Memoized ``fault_tolerance.repair_plan``: the plan is a pure function
+    of (code, missing, survivors) and costs a host Gaussian elimination —
+    warm repairs of the same loss pattern reuse it. R is read-only."""
+    helpers, R = fault_tolerance.repair_plan(code, list(missing), list(ids))
+    R.setflags(write=False)
+    return tuple(helpers), R
 
 
 # ---------------------------------------------------------------------------
@@ -59,7 +79,7 @@ def repair_np(code: RapidRAIDCode, missing, ids, shards) -> np.ndarray:
     """
     ids = list(ids)
     shards = np.asarray(shards)
-    helpers, R = fault_tolerance.repair_plan(code, missing, ids)
+    helpers, R = _repair_plan_cached(code, tuple(missing), tuple(ids))
     rows = [ids.index(h) for h in helpers]
     return gf.gf_matmul_np(R, shards[rows], code.l)
 
@@ -76,13 +96,10 @@ def _repair_shard_body(local, bp_node, *, rows, l, num_chunks, reverse=True,
     planes = bp_node[0]       # (rows, l)
     Bp = local.shape[-1]
     S = Bp // num_chunks
-    lsb = jnp.uint32(gf.LSB_MASK[l])
+    kernel_ops, blk = chain_lib._tick_kernel_args(S)
 
     def contribute(chunk, acc):
-        for b in range(l):
-            m = (chunk >> b) & lsb
-            acc = acc ^ (m[None, :] * planes[:, b][:, None])
-        return acc
+        return kernel_ops.repair_step(acc, chunk[None], planes, l, block=blk)
 
     if num_objects is None:
         def step_fn(wire_in, out, ch, active):
@@ -112,6 +129,38 @@ def _repair_shard_body(local, bp_node, *, rows, l, num_chunks, reverse=True,
         num_objects=num_objects, stagger=stagger, reverse=reverse)
 
 
+def _check_repair_shards(shards: np.ndarray, ids, ndim: int,
+                         what: str) -> None:
+    if shards.ndim != ndim or shards.shape[ndim - 2] != len(ids):
+        raise ValueError(
+            f"{what}: shards {shards.shape} must be "
+            f"{'(B_obj, ' if ndim == 3 else '('}len(ids)={len(ids)}, B)")
+
+
+def _build_repair(code: RapidRAIDCode, missing: tuple[int, ...],
+                  helpers: tuple[int, ...], R: np.ndarray, mesh,
+                  num_chunks: int):
+    """One compiled program: helper words (h, B) -> repaired (|missing|, B)."""
+    l = code.l
+    rows = len(missing)
+    bp = jnp.asarray(chain_lib.column_bitplanes(R, l))    # (h, rows, l)
+    body = functools.partial(_repair_shard_body, rows=rows, l=l,
+                             num_chunks=num_chunks)
+
+    def shard_body(local, bp_node):
+        return body(local, bp_node)[None]
+
+    fn = compat.shard_map(shard_body, mesh=mesh,
+                          in_specs=(P(AXIS), P(AXIS)), out_specs=P(AXIS))
+
+    @jax.jit
+    def program(helper_shards):
+        outs = fn(gf.pack_u32(helper_shards, l), bp)
+        # reverse chain: device 0 plays the LAST position — the replacement
+        return gf.unpack_u32(outs[0], l)
+    return program
+
+
 def pipelined_repair(code: RapidRAIDCode, ids, shards, missing,
                      num_chunks: int = 8, mesh=None) -> jax.Array:
     """Repair ≤ n-k lost shards by streaming k survivors through a chain.
@@ -119,36 +168,47 @@ def pipelined_repair(code: RapidRAIDCode, ids, shards, missing,
     ids: surviving codeword rows; shards (len(ids), B) words. The k chosen
     helpers form a reverse chain — the wire carries (|missing|, S) partial
     reconstructions, each helper fuses its GF inner-product contribution
-    in one pass, and DEVICE 0 (the replacement node) finishes holding the
-    repaired (|missing|, B) blocks. Raises ValueError if not decodable.
+    in one kernel launch per tick, and DEVICE 0 (the replacement node)
+    finishes holding the repaired (|missing|, B) blocks. Raises ValueError
+    if not decodable.
     """
     ids = list(ids)
     shards = np.asarray(shards)
-    helpers, R = fault_tolerance.repair_plan(code, missing, ids)
-    h = len(helpers)
-    rows = len(list(missing))
-    l = code.l
-    lanes = gf.LANES[l]
+    _check_repair_shards(shards, ids, 2, "pipelined_repair")
+    missing = tuple(int(m) for m in missing)
+    helpers, R = _repair_plan_cached(code, missing, tuple(ids))
     B = shards.shape[1]
-    assert B % (lanes * num_chunks) == 0, (B, lanes, num_chunks)
-    mesh = mesh or chain_lib.make_chain_mesh(h)
-    bp = chain_lib.column_bitplanes(R, l)                 # (h, rows, l)
-    helper_shards = shards[[ids.index(i) for i in helpers]]
-    shards_packed = np.asarray(gf.pack_u32(jnp.asarray(helper_shards), l))
+    chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_repair")
+    mesh = mesh or chain_lib.make_chain_mesh(len(helpers))
+    fn = jitcache.get(
+        ("repair", code, missing, helpers, mesh, B, num_chunks),
+        lambda: _build_repair(code, missing, helpers, R, mesh, num_chunks))
+    return fn(shards[[ids.index(i) for i in helpers]])
+
+
+def _build_repair_many(code: RapidRAIDCode, missing: tuple[int, ...],
+                       helpers: tuple[int, ...], R: np.ndarray, mesh,
+                       num_chunks: int, B_obj: int, stagger: int):
+    """One compiled program: (B_obj, h, B) helpers -> (B_obj, |missing|, B)."""
+    l = code.l
+    rows = len(missing)
+    bp = jnp.asarray(chain_lib.column_bitplanes(R, l))
+    body = functools.partial(_repair_shard_body, rows=rows, l=l,
+                             num_chunks=num_chunks, num_objects=B_obj,
+                             stagger=stagger)
 
     def shard_body(local, bp_node):
-        out = _repair_shard_body(local, bp_node, rows=rows, l=l,
-                                 num_chunks=num_chunks)
-        return out[None]
+        return body(local, bp_node)[None]
 
-    fn = jax.jit(compat.shard_map(
-        shard_body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
-        out_specs=P(AXIS)))
-    sharding = NamedSharding(mesh, P(AXIS))
-    outs = fn(jax.device_put(jnp.asarray(shards_packed), sharding),
-              jax.device_put(jnp.asarray(bp), sharding))
-    # reverse chain: device 0 plays the LAST position — the replacement node
-    return gf.unpack_u32(outs[0], l)
+    fn = compat.shard_map(shard_body, mesh=mesh,
+                          in_specs=(P(AXIS), P(AXIS)), out_specs=P(AXIS))
+
+    @jax.jit
+    def program(helper_shards):
+        packed = gf.pack_u32(helper_shards, l).transpose(1, 0, 2)  # (h,B_obj,Bp)
+        outs = fn(packed, bp)
+        return gf.unpack_u32(outs[0], l)                 # (B_obj, rows, B)
+    return program
 
 
 def pipelined_repair_many(code: RapidRAIDCode, ids, shards, missing,
@@ -163,38 +223,42 @@ def pipelined_repair_many(code: RapidRAIDCode, ids, shards, missing,
     """
     ids = list(ids)
     shards = np.asarray(shards)
-    B_obj, n_alive, B = shards.shape
-    assert n_alive == len(ids)
-    helpers, R = fault_tolerance.repair_plan(code, missing, ids)
-    h = len(helpers)
-    rows = len(list(missing))
-    l = code.l
-    assert B % (gf.LANES[l] * num_chunks) == 0
-    mesh = mesh or chain_lib.make_chain_mesh(h)
-    bp = chain_lib.column_bitplanes(R, l)
-    helper_shards = shards[:, [ids.index(i) for i in helpers]]
-    shards_packed = np.asarray(
-        gf.pack_u32(jnp.asarray(helper_shards.reshape(-1, B)), l)
-    ).reshape(B_obj, h, -1).transpose(1, 0, 2)            # (h, B_obj, Bp)
-
-    def shard_body(local, bp_node):
-        out = _repair_shard_body(local, bp_node, rows=rows, l=l,
-                                 num_chunks=num_chunks,
-                                 num_objects=B_obj, stagger=stagger)
-        return out[None]
-
-    fn = jax.jit(compat.shard_map(
-        shard_body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
-        out_specs=P(AXIS)))
-    sharding = NamedSharding(mesh, P(AXIS))
-    outs = fn(jax.device_put(jnp.asarray(shards_packed), sharding),
-              jax.device_put(jnp.asarray(bp), sharding))
-    return gf.unpack_u32(outs[0], l)                      # (B_obj, rows, B)
+    _check_repair_shards(shards, ids, 3, "pipelined_repair_many")
+    missing = tuple(int(m) for m in missing)
+    helpers, R = _repair_plan_cached(code, missing, tuple(ids))
+    B_obj, _, B = shards.shape
+    chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_repair_many")
+    mesh = mesh or chain_lib.make_chain_mesh(len(helpers))
+    fn = jitcache.get(
+        ("repair_many", code, missing, helpers, mesh, B_obj, B, num_chunks,
+         stagger),
+        lambda: _build_repair_many(code, missing, helpers, R, mesh,
+                                   num_chunks, B_obj, stagger))
+    return fn(shards[:, [ids.index(i) for i in helpers]])
 
 
 # ---------------------------------------------------------------------------
 # star-topology repair baseline (the scheme repair pipelining replaces)
 # ---------------------------------------------------------------------------
+
+
+def _build_star_repair(code: RapidRAIDCode, R: np.ndarray, mesh):
+    """One compiled program for the star baseline (all-gather + local GF)."""
+    l = code.l
+    R = np.asarray(R)
+
+    def shard_body(local):
+        gathered = lax.all_gather(local[0], AXIS)        # (h, Bp) on everyone
+        return gf.gf_matvec_packed(R, gathered, l)[None]
+
+    fn = compat.shard_map(shard_body, mesh=mesh, in_specs=(P(AXIS),),
+                          out_specs=P(AXIS))
+
+    @jax.jit
+    def program(helper_shards):
+        outs = fn(gf.pack_u32(helper_shards, l))
+        return gf.unpack_u32(outs[0], l)
+    return program
 
 
 def star_repair(code: RapidRAIDCode, ids, shards, missing,
@@ -206,22 +270,15 @@ def star_repair(code: RapidRAIDCode, ids, shards, missing,
     """
     ids = list(ids)
     shards = np.asarray(shards)
-    helpers, R = fault_tolerance.repair_plan(code, missing, ids)
-    h = len(helpers)
-    l = code.l
-    mesh = mesh or chain_lib.make_chain_mesh(h)
-    helper_shards = shards[[ids.index(i) for i in helpers]]
-    shards_packed = np.asarray(gf.pack_u32(jnp.asarray(helper_shards), l))
-
-    def shard_body(local):
-        gathered = lax.all_gather(local[0], AXIS)         # (h, Bp) on everyone
-        return gf.gf_matvec_packed(R, gathered, l)[None]
-
-    fn = jax.jit(compat.shard_map(
-        shard_body, mesh=mesh, in_specs=(P(AXIS),), out_specs=P(AXIS)))
-    sharding = NamedSharding(mesh, P(AXIS))
-    outs = fn(jax.device_put(jnp.asarray(shards_packed), sharding))
-    return gf.unpack_u32(outs[0], l)
+    _check_repair_shards(shards, ids, 2, "star_repair")
+    chain_lib._check_chunking(shards.shape[1], code.l, 1, "star_repair")
+    missing = tuple(int(m) for m in missing)
+    helpers, R = _repair_plan_cached(code, missing, tuple(ids))
+    mesh = mesh or chain_lib.make_chain_mesh(len(helpers))
+    fn = jitcache.get(
+        ("star_repair", code, missing, helpers, mesh, shards.shape[1]),
+        lambda: _build_star_repair(code, R, mesh))
+    return fn(shards[[ids.index(i) for i in helpers]])
 
 
 # ---------------------------------------------------------------------------
@@ -253,7 +310,7 @@ def degraded_read(code: RapidRAIDCode, ids, shard_slices, block_ids,
     D = rapidraid.decode_matrix(code, list(ids))[list(block_ids)]
     W = shard_slices.shape[1]
     lanes = gf.LANES[code.l]
-    assert W % lanes == 0, (W, lanes)
+    chain_lib._check_chunking(W, code.l, 1, "degraded_read")
     packed = gf.pack_u32(jnp.asarray(shard_slices), code.l)
     out = kernel_ops.encode_packed(D, packed, code.l,
                                    block=kernel_ops.pick_block(W // lanes),
