@@ -31,6 +31,7 @@ import jax
 
 from benchmarks import fig4_coding_times as fig4
 from benchmarks import fig_hetero
+from benchmarks import fig_lifecycle
 from benchmarks import fig_repair_times as figr
 from benchmarks import fig_throughput as figt
 
@@ -54,6 +55,14 @@ def extract_speedups(results: dict) -> dict[str, float]:
                 row["star_s"] / row["pipelined_s"])
     for row in results["model"]["hetero"]:
         sp[f"model_hetero_{row['slow_factor']}x"] = row["speedup"]
+    life = results["model"].get("lifecycle", {})
+    if life:
+        # paired Monte Carlo loss ratio (replication/RapidRAID, Laplace
+        # smoothed) and the asymptotic replicated->coded overhead reduction
+        sp["model_lifecycle_durability"] = (
+            life["durability"]["durability_ratio"])
+        sp["model_lifecycle_overhead"] = (
+            life["overhead"][-1]["reduction_vs_replicated"])
     real = results.get("real", {})
     enc = real.get("encode_multi", {})
     if "chain_loop8_s" in enc:
@@ -81,32 +90,84 @@ def extract_speedups(results: dict) -> dict[str, float]:
     return {k: round(v, 3) for k, v in sp.items()}
 
 
-def diff_against_baseline(speedups: dict, baseline_path: str) -> list[str]:
-    """Blocking regressions vs the committed baseline (model keys only)."""
-    with open(baseline_path) as f:
-        base = json.load(f).get("speedups", {})
-    failures = []
-    for key, ref in sorted(base.items()):
-        if key not in speedups:
+def diff_rows(speedups: dict, baseline_path: str | None) -> list[dict]:
+    """Per-key comparison vs the committed baseline — the ONE place the
+    regression rule lives; the gate and the step-summary table both
+    consume these rows. Statuses: ok / regression / missing / new."""
+    base: dict = {}
+    if baseline_path and os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            base = json.load(f).get("speedups", {})
+    rows = []
+    for key in sorted(set(base) | set(speedups)):
+        ref, cur = base.get(key), speedups.get(key)
+        if cur is None:
             # a vanished metric is the worst regression of all — never
             # let a dropped/renamed model row bypass the gate silently
-            if key.startswith("model_"):
+            status = "missing"
+        elif ref is None or ref <= 0:
+            status = "new"
+        elif cur < (1.0 - REGRESSION_TOLERANCE) * ref:
+            status = "regression"
+        else:
+            status = "ok"
+        rows.append({"key": key, "baseline": ref, "current": cur,
+                     "blocking": key.startswith("model_"), "status": status})
+    return rows
+
+
+def diff_against_baseline(speedups: dict, baseline_path: str) -> list[str]:
+    """Blocking regressions vs the committed baseline (model keys only)."""
+    failures = []
+    for r in diff_rows(speedups, baseline_path):
+        key, ref, cur = r["key"], r["baseline"], r["current"]
+        if r["status"] == "missing":
+            if r["blocking"]:
                 failures.append(f"{key}: present in baseline but missing "
                                 f"from this run")
             else:
                 print(f"WARNING: baseline key {key} missing from this run")
-            continue
-        if ref <= 0:
-            continue
-        cur = speedups[key]
-        if cur < (1.0 - REGRESSION_TOLERANCE) * ref:
+        elif r["status"] == "regression":
             msg = (f"{key}: speedup {cur:.2f}x vs baseline {ref:.2f}x "
                    f"(>{int(REGRESSION_TOLERANCE * 100)}% regression)")
-            if key.startswith("model_"):
+            if r["blocking"]:
                 failures.append(msg)
             else:
                 print(f"WARNING (advisory, noisy real path): {msg}")
     return failures
+
+
+def write_step_summary(rows: list[dict], n_failures: int,
+                       wall_s: float) -> None:
+    """Render ``diff_rows`` as a markdown table in the job summary.
+
+    CI's regression gate used to fail with its evidence buried in the log;
+    ``$GITHUB_STEP_SUMMARY`` (set by Actions) gets the same comparison as
+    a table on the run page. No-op outside Actions.
+    """
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    label = {("missing", True): "MISSING (blocking)",
+             ("missing", False): "missing (advisory)",
+             ("regression", True): "REGRESSION",
+             ("regression", False): "regression (advisory)",
+             ("new", True): "new key", ("new", False): "new key",
+             ("ok", True): "ok", ("ok", False): "ok"}
+    lines = ["## Benchmark smoke: speedups vs committed baseline", "",
+             f"{n_failures} blocking regression(s); wall {wall_s:.1f}s. "
+             "`model_*` keys are deterministic (blocking); `real_*` keys "
+             "are wall-clock (advisory).", "",
+             "| key | baseline | this run | ratio | status |",
+             "|---|---:|---:|---:|---|"]
+    fmt = (lambda v: "—" if v is None else f"{v:.2f}x")
+    for r in rows:
+        ref, cur = r["baseline"], r["current"]
+        ratio = f"{cur / ref:.2f}" if (ref and cur) else "—"
+        lines.append(f"| `{r['key']}` | {fmt(ref)} | {fmt(cur)} | {ratio} "
+                     f"| {label[(r['status'], r['blocking'])]} |")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main() -> int:
@@ -128,6 +189,7 @@ def main() -> int:
             "fig4": fig4.network_model(),
             "repair": figr.network_model(),
             "hetero": fig_hetero.network_model(),
+            "lifecycle": fig_lifecycle.network_model(),
         },
         "real": {},
     }
@@ -155,6 +217,10 @@ def main() -> int:
         real["throughput"] = figt.real_throughput(nwords=2048, reps=3)
     except Exception as e:  # noqa: BLE001
         real["throughput"] = {"error": str(e)[:500]}
+    try:
+        real["lifecycle"] = fig_lifecycle.real_soak(ticks=25)
+    except Exception as e:  # noqa: BLE001
+        real["lifecycle"] = {"error": str(e)[:500]}
     results["speedups"] = extract_speedups(results)
     results["meta"]["wall_s"] = round(time.time() - t0, 1)
     with open(args.out, "w") as f:
@@ -168,6 +234,13 @@ def main() -> int:
              for r in results["model"]["repair"] if r["chain_len"] >= 4)
     ok = ok and all(r["speedup"] >= 1.0 for r in results["model"]["hetero"])
     ok = ok and "error" not in real["repair_8_4"]
+    # lifecycle gates: the coded scheme must beat replication's loss rate
+    # in the paired Monte Carlo, and the real soak must lose nothing
+    life = results["model"]["lifecycle"]["durability"]
+    ok = ok and life["p_loss_rapidraid"] <= life["p_loss_replication"]
+    if "error" not in real["lifecycle"]:
+        ok = ok and real["lifecycle"]["lost_objects"] == 0
+    failures: list[str] = []
     if args.baseline and os.path.exists(args.baseline):
         failures = diff_against_baseline(results["speedups"], args.baseline)
         for msg in failures:
@@ -175,6 +248,8 @@ def main() -> int:
         ok = ok and not failures
     elif args.baseline:
         print(f"baseline {args.baseline} not found — diff skipped")
+    write_step_summary(diff_rows(results["speedups"], args.baseline),
+                       len(failures), results["meta"]["wall_s"])
     return 0 if ok else 1
 
 

@@ -78,6 +78,29 @@ def hetero_config(slow: dict[int, float], base: NetConfig | None = None,
                                tick_overhead=tick_overhead)
 
 
+def churn_config(cfg: NetConfig, n_repairs: int, k: int = 11,
+                 base_flows: float = 2.0) -> NetConfig:
+    """Background repair traffic stealing NIC capacity from archival.
+
+    A churning cluster runs the scrubber's repair chains CONCURRENTLY with
+    the archival pipeline. Each of the ``n_repairs`` repair chains occupies
+    k+1 nodes (round-robin placement) and adds one flow at its chain ends,
+    two at interior positions; a node whose NIC already carries
+    ``base_flows`` archival flows keeps base/(base + extra) of its
+    bandwidth. First-order model: the fluid simulator then prices the
+    archival chain against the reduced per-node capacities, giving the
+    lifecycle engine's model-side cost of archiving while healing.
+    """
+    extra = np.zeros(cfg.n_nodes)
+    for r in range(n_repairs):
+        for pos in range(k + 1):
+            node = (r + pos) % cfg.n_nodes
+            extra[node] += 1.0 if pos in (0, k) else 2.0
+    bws = [node_bw(cfg, frozenset(), i) * base_flows / (base_flows + extra[i])
+           for i in range(cfg.n_nodes)]
+    return dataclasses.replace(cfg, node_bws=tuple(bws))
+
+
 def node_cap(cfg: NetConfig, congested: frozenset, i: int) -> float:
     """Total NIC capacity pooled over in+out flows."""
     if i in congested:

@@ -169,13 +169,19 @@ def _device_order(perm: np.ndarray, scheduled: bool) -> list[int] | None:
 def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
                  node_speeds: np.ndarray | None = None,
                  use_devices: bool | None = None,
-                 topology=None) -> dict:
+                 topology=None, reclaim_hot: bool = True) -> dict:
     """Migrate step's hot replicas to RapidRAID coded blocks; drop hot.
 
     ``topology`` engages the heterogeneity-aware scheduler
     (``repro.core.scheduler``): chain placement + chunk count chosen against
     the topology's makespan model and recorded in the manifest
     (``perm`` / ``sched``), so repair and decode reuse the placement.
+
+    ``reclaim_hot=False`` defers the replica deletion: the step is coded
+    and readable from the archive tier, but the hot replicas stay on disk
+    (manifest ``hot_retained``) until ``reclaim_replicas`` has digest-
+    verified every placed coded block — the lifecycle engine's
+    never-drop-the-last-copy-unverified invariant.
     """
     manifest = get_manifest(store, step)
     if manifest["tier"] != "hot":
@@ -210,10 +216,11 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
     for pos in range(acfg.n):
         store.put(int(perm[pos]), ARC.format(step=step, i=pos),
                   coded_blobs[pos])
-    # drop the hot replicas (the actual capacity saving: 2x -> n/k)
-    for node, held in enumerate(manifest["placement"]):
-        for j in held:
-            store.delete(node, HOT.format(step=step, j=j))
+    if reclaim_hot:
+        # drop the hot replicas (the actual capacity saving: 2x -> n/k)
+        for node, held in enumerate(manifest["placement"]):
+            for j in held:
+                store.delete(node, HOT.format(step=step, j=j))
 
     manifest = {
         **manifest, "tier": "archive",
@@ -221,6 +228,8 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
         "coded_digests": [digest(b) for b in coded_blobs],
         "orig_digests": manifest["digests"],
     }
+    if not reclaim_hot:
+        manifest["hot_retained"] = True
     if sched is not None:
         manifest["sched"] = sched
     _put_manifest(store, step, manifest)
@@ -230,7 +239,8 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
 def _archive_group(store: NodeStore, grp: list[int], acfg: ArchiveConfig,
                    code, perm: np.ndarray, num_chunks: int, stagger: int,
                    use_devices: bool, manifests: dict[int, dict],
-                   sched: dict | None) -> dict[int, dict]:
+                   sched: dict | None, reclaim_hot: bool = True
+                   ) -> dict[int, dict]:
     """Encode one rectangular (same block length, same placement) batch of
     hot steps and place/manifest the coded blocks."""
     from repro.kernels.gf_encode import ops as kernel_ops
@@ -262,9 +272,10 @@ def _archive_group(store: NodeStore, grp: list[int], acfg: ArchiveConfig,
             store.put(int(perm[pos]), ARC.format(step=step, i=pos),
                       coded_blobs[pos])
         manifest = manifests[step]
-        for node, held in enumerate(manifest["placement"]):
-            for j in held:
-                store.delete(node, HOT.format(step=step, j=j))
+        if reclaim_hot:
+            for node, held in enumerate(manifest["placement"]):
+                for j in held:
+                    store.delete(node, HOT.format(step=step, j=j))
         manifest = {
             **manifest, "tier": "archive",
             "perm": [int(p) for p in perm],
@@ -272,6 +283,8 @@ def _archive_group(store: NodeStore, grp: list[int], acfg: ArchiveConfig,
             "orig_digests": manifest["digests"],
             "batched_with": [int(s) for s in grp],
         }
+        if not reclaim_hot:
+            manifest["hot_retained"] = True
         if sched is not None:
             manifest["sched"] = sched
         _put_manifest(store, step, manifest)
@@ -282,7 +295,8 @@ def _archive_group(store: NodeStore, grp: list[int], acfg: ArchiveConfig,
 def archive_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
                  node_speeds: np.ndarray | None = None,
                  use_devices: bool | None = None,
-                 stagger: int = 1, topology=None) -> list[dict]:
+                 stagger: int = 1, topology=None,
+                 reclaim_hot: bool = True) -> list[dict]:
     """Batched migration: archive B hot steps CONCURRENTLY (paper §VI).
 
     All steps' objects are encoded together — on an n-device mesh via the
@@ -327,7 +341,7 @@ def archive_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
                     store, sub, acfg, code, np.asarray(plan.order),
                     plan.num_chunks, stagger, use_devices, manifests,
                     {**plan.to_manifest(), "topology": topology.to_dict(),
-                     "chain_group": int(g)}))
+                     "chain_group": int(g)}, reclaim_hot=reclaim_hot))
         else:
             if node_speeds is not None:
                 perm = chain_lib.order_chain(np.asarray(node_speeds),
@@ -336,8 +350,45 @@ def archive_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
                 perm = np.arange(acfg.n)
             out.update(_archive_group(store, grp, acfg, code, perm,
                                       acfg.num_chunks, stagger, use_devices,
-                                      manifests, None))
+                                      manifests, None,
+                                      reclaim_hot=reclaim_hot))
     return [out[s] for s in steps]
+
+
+def reclaim_replicas(store: NodeStore, step: int) -> dict | None:
+    """Drop a retained hot tier AFTER digest-verifying the archived copy.
+
+    ``archive_step``/``archive_many`` with ``reclaim_hot=False`` leave the
+    replicas on disk; this is the second phase of that two-phase migration.
+    The replicas are deleted only once ALL n coded blocks are present on
+    their manifest-recorded nodes and match their recorded digests — a
+    missing or corrupt shard (e.g. its write landed on a node that died
+    mid-archival) defers the reclaim (returns None) until the scrubber has
+    healed it; a digest-MISMATCHED shard is deleted on the spot (it is
+    provably not the data), demoting corruption to the missing-shard state
+    the repair path heals. Returns the updated manifest on success, the
+    manifest unchanged if the step holds no retained replicas (idempotent),
+    and raises ValueError for a step that was never archived.
+    """
+    manifest = get_manifest(store, step)
+    if manifest["tier"] == "hot":
+        raise ValueError(
+            f"step {step} is not archived — refusing to reclaim replicas")
+    if not manifest.get("hot_retained"):
+        return manifest
+    alive = {pos for pos, _ in _alive_coded(store, step, manifest)}
+    if len(alive) < manifest["n"]:
+        for pos in range(manifest["n"]):   # corrupt copies -> missing
+            rel = ARC.format(step=step, i=pos)
+            if pos not in alive and store.has(manifest["perm"][pos], rel):
+                store.delete(manifest["perm"][pos], rel)
+        return None                      # unverified shards: keep the replicas
+    for node, held in enumerate(manifest["placement"]):
+        for j in held:
+            store.delete(node, HOT.format(step=step, j=j))
+    manifest = {**manifest, "hot_retained": False}
+    _put_manifest(store, step, manifest)
+    return manifest
 
 
 def archive_classical(store: NodeStore, step: int, acfg: ArchiveConfig) -> dict:
@@ -393,10 +444,21 @@ def restore_blocks(store: NodeStore, step: int, acfg: ArchiveConfig,
         return hot_load(store, step, manifest)
     alive = _alive_coded(store, step, manifest)
     if heal and manifest["tier"] == "archive" and len(alive) < manifest["n"]:
-        repair(store, step, acfg)
+        try:
+            repair(store, step, acfg)
+        except ValueError:
+            # undecodable survivors: with retained replicas the hot tier
+            # below still serves the read; without them, fall through to
+            # the clear too-few-blocks error instead of dying mid-heal
+            if not manifest.get("hot_retained"):
+                raise
         manifest = get_manifest(store, step)   # perm may have changed
         alive = _alive_coded(store, step, manifest)
     if len(alive) < manifest["k"]:
+        if manifest.get("hot_retained"):
+            # two-phase migration: the replicas were never reclaimed, so
+            # the hot tier still backs the object
+            return hot_load(store, step, manifest)
         raise FileNotFoundError(
             f"step {step}: only {len(alive)} of n={manifest['n']} coded "
             f"blocks alive, need k={manifest['k']}")
@@ -693,20 +755,83 @@ def _put_manifest(store: NodeStore, step: int, manifest: dict) -> None:
         store.put(i, MANIFEST.format(step=step), data)
 
 
+_REQUIRED_KEYS = ("step", "tier", "n", "k", "l", "seed", "block_bytes")
+_TIER_KEYS = {
+    "hot": ("placement", "digests"),
+    "archive": ("placement", "perm", "coded_digests", "orig_digests"),
+    "archive_classical": ("placement", "perm", "coded_digests",
+                          "orig_digests"),
+}
+
+
+def _validate_manifest(manifest, step: int) -> dict:
+    """Clear ValueError (never a downstream KeyError) for damaged manifests."""
+    if not isinstance(manifest, dict):
+        raise ValueError(f"step {step}: manifest is {type(manifest).__name__},"
+                         f" not an object")
+    tier = manifest.get("tier")
+    if tier not in _TIER_KEYS:
+        raise ValueError(f"step {step}: manifest tier {tier!r} unknown "
+                         f"(want one of {sorted(_TIER_KEYS)})")
+    missing = [key for key in _REQUIRED_KEYS + _TIER_KEYS[tier]
+               if key not in manifest]
+    if missing:
+        raise ValueError(f"step {step}: manifest ({tier}) is missing "
+                         f"required keys {missing} — corrupt or "
+                         f"partially written")
+    return manifest
+
+
 def get_manifest(store: NodeStore, step: int) -> dict:
+    """First VALID manifest replica; a corrupt replica falls through to the
+    next node's copy, and only-corrupt-copies raises a clear ValueError
+    (so a scrubber can report the step instead of dying on JSON internals).
+    """
+    rel = MANIFEST.format(step=step)
+    errors: list[str] = []
+    found = False
     for i in range(store.n_nodes):
-        rel = MANIFEST.format(step=step)
-        if store.has(i, rel):
-            return json.loads(store.get(i, rel))
+        if not store.has(i, rel):
+            continue
+        found = True
+        try:
+            return _validate_manifest(json.loads(store.get(i, rel)), step)
+        except ValueError as e:           # JSONDecodeError is a ValueError
+            errors.append(f"node {i}: {e}")
+    if found:
+        raise ValueError(
+            f"step {step}: every manifest replica is corrupt — "
+            + "; ".join(errors))
     raise FileNotFoundError(f"no manifest for step {step}")
 
 
 def list_steps(store: NodeStore) -> list[int]:
+    """Steps with a published manifest on any node.
+
+    Unparseable names in a ``manifests/`` directory raise a clear
+    ValueError naming the file; a ``.json.tmp`` is an interrupted
+    ``NodeStore.put`` — ignored when the published manifest exists
+    somewhere, reported when the step has nothing but partial writes.
+    """
     import os
-    steps = set()
+    import re
+    pat = re.compile(r"^(\d{8})\.json(\.tmp)?$")
+    steps: set[int] = set()
+    partial: set[int] = set()
     for i in range(store.n_nodes):
         d = store.path(i, "manifests")
-        if os.path.isdir(d):
-            for f in os.listdir(d):
-                steps.add(int(f.split(".")[0]))
+        if not os.path.isdir(d):
+            continue
+        for f in os.listdir(d):
+            m = pat.match(f)
+            if m is None:
+                raise ValueError(
+                    f"node {i}: unrecognized file {f!r} in manifests/ — "
+                    f"want NNNNNNNN.json")
+            (partial if m.group(2) else steps).add(int(m.group(1)))
+    orphans = partial - steps
+    if orphans:
+        raise ValueError(
+            f"steps {sorted(orphans)} have only partially-written manifests "
+            f"(interrupted put left .json.tmp and no published copy)")
     return sorted(steps)

@@ -159,5 +159,57 @@ class NodeStore:
         return self.has(i, rel)
 
 
+class ChurnNodeStore(NodeStore):
+    """A NodeStore whose nodes can be DOWN, not just wiped.
+
+    ``NodeStore.fail_node`` models a disk loss; a live cluster also has the
+    window where the node is off the network: writes addressed to it are
+    dropped (the data never lands), reads and existence probes fail. The
+    lifecycle engine (``repro.storage.lifecycle``) drives ``fail`` /
+    ``rejoin`` from a churn trace; every storage-layer caller (archive,
+    repair, scrub) sees a down node exactly as a node with nothing on it,
+    which is what the rejoined empty disk will look like anyway.
+    """
+
+    def __post_init__(self):
+        super().__post_init__()
+        self.down: set[int] = set()
+
+    def fail(self, i: int) -> None:
+        """Node i dies: disk wiped AND off the network until ``rejoin``."""
+        self.fail_node(i)
+        self.down.add(i)
+
+    def rejoin(self, i: int) -> None:
+        """Node i returns with an empty disk (repair refills it)."""
+        self.down.discard(i)
+
+    def is_up(self, i: int) -> bool:
+        return i not in self.down
+
+    def put(self, i: int, rel: str, data: bytes) -> None:
+        if i in self.down:
+            return                      # write addressed to a dead node: lost
+        super().put(i, rel, data)
+
+    def get(self, i: int, rel: str) -> bytes:
+        if i in self.down:
+            raise FileNotFoundError(f"node {i} is down ({rel})")
+        return super().get(i, rel)
+
+    def get_range(self, i: int, rel: str, offset: int, nbytes: int) -> bytes:
+        if i in self.down:
+            raise FileNotFoundError(f"node {i} is down ({rel})")
+        return super().get_range(i, rel, offset, nbytes)
+
+    def size(self, i: int, rel: str) -> int:
+        if i in self.down:
+            raise FileNotFoundError(f"node {i} is down ({rel})")
+        return super().size(i, rel)
+
+    def has(self, i: int, rel: str) -> bool:
+        return i not in self.down and super().has(i, rel)
+
+
 def digest(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()[:16]

@@ -1,0 +1,309 @@
+"""Cluster lifecycle engine: determinism, bounded-churn zero loss, verified
+reclaim, corrupt-manifest reporting, churn traces, durability model."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import churn
+from repro.storage import archive as arc
+from repro.storage import object_store as obj
+from repro.storage.lifecycle import ClusterLifecycle, LifecycleConfig
+
+N, K = 6, 4
+
+
+def _acfg(**kw):
+    return arc.ArchiveConfig(n=N, k=K, l=16, num_chunks=4, **kw)
+
+
+def _lcfg(**kw):
+    base = dict(arrival_rate=0.5, block_bytes=128, archive_age=2,
+                batch_max=4, seed=0)
+    base.update(kw)
+    return LifecycleConfig(**base)
+
+
+def _engine(root, ticks, seed=0, fail_rate=0.03, **lkw):
+    trace = churn.bounded_trace(N, K, ticks, fail_rate=fail_rate, seed=seed)
+    return ClusterLifecycle(str(root), _acfg(), _lcfg(**lkw), trace), trace
+
+
+# ---------------------------------------------------------------------------
+# churn traces
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrip(tmp_path):
+    trace = churn.bounded_trace(N, K, 100, seed=3)
+    path = str(tmp_path / "trace.json")
+    churn.save_trace(path, trace)
+    back = churn.load_trace(path)
+    assert back.n_nodes == trace.n_nodes
+    assert back.events == trace.events
+
+
+def test_trace_validation_errors(tmp_path):
+    base = churn.bounded_trace(N, K, 50, seed=1).to_dict()
+
+    def load(mutate):
+        d = json.loads(json.dumps(base))
+        mutate(d)
+        p = str(tmp_path / "t.json")
+        with open(p, "w") as f:
+            json.dump(d, f)
+        return churn.load_trace(p)
+
+    with pytest.raises(ValueError, match="version"):
+        load(lambda d: d.update(version=99))
+    with pytest.raises(ValueError, match="outside"):
+        load(lambda d: d["events"].append(
+            {"tick": 999, "op": "fail", "node": N}))
+    with pytest.raises(ValueError, match="op"):
+        load(lambda d: d["events"].append(
+            {"tick": 999, "op": "explode", "node": 0}))
+    with pytest.raises(ValueError, match="malformed"):
+        load(lambda d: d["events"].append({"tick": 999}))
+    # a join for a node that is not down is inconsistent history
+    with pytest.raises(ValueError, match="not down"):
+        load(lambda d: d.update(events=[
+            {"tick": 0, "op": "join", "node": 1}]))
+    p = str(tmp_path / "garbage.json")
+    with open(p, "w") as f:
+        f.write("{not json")
+    with pytest.raises(ValueError, match="corrupt churn trace"):
+        churn.load_trace(p)
+
+
+def test_bounded_trace_respects_bounds():
+    """Replay: never more than n-k unhealed nodes, never a whole hot
+    replica pair unhealed at once."""
+    trace = churn.bounded_trace(N, K, 300, fail_rate=0.08, seed=7)
+    pairs = [set(g) for g in churn.replica_pairs(N, K)]
+    assert pairs and all(len(g) == 2 for g in pairs)
+    down, dirty = set(), {}
+    saw_fail = False
+    for t in range(301):
+        for ev in trace.by_tick().get(t, []):
+            if ev.op == "join":
+                down.discard(ev.node)
+                dirty[ev.node] = t + 1
+            else:
+                saw_fail = True
+                down.add(ev.node)
+        unhealed = down | {m for m, d in dirty.items() if d > t}
+        assert len(unhealed) <= N - K
+        assert not any(g <= unhealed for g in pairs)
+    assert saw_fail  # the trace actually exercised churn
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+def test_determinism_same_seed_same_metrics_and_manifests(tmp_path):
+    """Same seed + config => identical per-tick metrics AND manifests."""
+    runs = []
+    for name in ("a", "b"):
+        eng, _ = _engine(tmp_path / name, 30, seed=5, fail_rate=0.05)
+        metrics = eng.run(30)
+        manifests = {s: arc.get_manifest(eng.store, s)
+                     for s, st in eng.objects.items()
+                     if st["state"] != "lost"}
+        runs.append((metrics, manifests))
+    assert runs[0][0] == runs[1][0]
+    assert runs[0][1] == runs[1][1]
+
+
+def test_soak_200_ticks_bounded_churn_zero_loss(tmp_path):
+    """The acceptance soak: 200 ticks, churn bounded by n-k per repair
+    window => zero lost objects and every object restores digest-verified."""
+    eng, trace = _engine(tmp_path, 200, seed=0, fail_rate=0.03)
+    metrics = eng.run(200)
+    assert len(trace.events) > 10          # churn genuinely happened
+    s = eng.summary()
+    assert s["lost_objects"] == 0
+    assert s["scrub_errors"] == 0
+    assert s["total_repaired_shards"] > 0  # the scrubber genuinely healed
+    assert eng.verify_all() == s["objects"]
+    # storage converges from replicated (2x) toward coded (n/k)
+    assert metrics[-1]["storage_overhead"] < 1.7
+    assert all(r["lost_objects"] == 0 for r in metrics)
+
+
+def test_reclaim_only_after_digest_verified_archival(tmp_path):
+    """Replicas survive archival until EVERY coded block digest-verifies."""
+    store = obj.NodeStore(str(tmp_path), N)
+    acfg = _acfg()
+    rng = np.random.default_rng(0)
+    blocks = rng.integers(0, 256, size=(K, 128), dtype=np.uint8)
+    arc.hot_save(store, 1, blocks, acfg)
+    manifest = arc.archive_many(store, [1], acfg, use_devices=False,
+                                reclaim_hot=False)[0]
+    assert manifest["hot_retained"] is True
+
+    def hot_files():
+        return [(i, j) for i, held in enumerate(manifest["placement"])
+                for j in held
+                if store.has(i, arc.HOT.format(step=1, j=j))]
+
+    assert hot_files()                     # replicas still on disk
+    # break one coded shard: reclaim must refuse (and keep the replicas)
+    pos = 2
+    node = manifest["perm"][pos]
+    store.put(node, arc.ARC.format(step=1, i=pos), b"corrupt!")
+    assert arc.reclaim_replicas(store, 1) is None
+    assert hot_files()
+    # heal it (corrupt helper is demoted + repaired), then reclaim succeeds
+    assert arc.repair(store, 1, acfg, use_devices=False) == [pos]
+    sealed = arc.reclaim_replicas(store, 1)
+    assert sealed["hot_retained"] is False
+    assert not hot_files()
+    # idempotent second call
+    assert arc.reclaim_replicas(store, 1)["hot_retained"] is False
+    np.testing.assert_array_equal(arc.restore_blocks(store, 1, acfg), blocks)
+
+
+def test_retained_replicas_back_unrecoverable_archive(tmp_path):
+    """Before reclaim, losing > n-k coded blocks still restores (hot falls
+    back); a never-archived step refuses reclaim with a ValueError."""
+    store = obj.NodeStore(str(tmp_path), N)
+    acfg = _acfg()
+    rng = np.random.default_rng(1)
+    blocks = rng.integers(0, 256, size=(K, 128), dtype=np.uint8)
+    arc.hot_save(store, 1, blocks, acfg)
+    with pytest.raises(ValueError, match="not archived"):
+        arc.reclaim_replicas(store, 1)
+    manifest = arc.archive_step(store, 1, acfg, use_devices=False,
+                                reclaim_hot=False)
+    for pos in range(N - K + 1):           # one more than the code tolerates
+        store.delete(manifest["perm"][pos], arc.ARC.format(step=1, i=pos))
+    np.testing.assert_array_equal(arc.restore_blocks(store, 1, acfg), blocks)
+    # heal=True must not die on the undecodable survivors either — the
+    # failed repair falls through to the retained replicas
+    np.testing.assert_array_equal(
+        arc.restore_blocks(store, 1, acfg, heal=True), blocks)
+
+
+def test_churn_store_drops_writes_and_reads_while_down(tmp_path):
+    store = obj.ChurnNodeStore(str(tmp_path), 3)
+    store.put(1, "x.bin", b"alive")
+    store.fail(1)
+    assert not store.is_up(1)
+    assert not store.has(1, "x.bin")
+    store.put(1, "y.bin", b"dropped")      # write addressed to a dead node
+    with pytest.raises(FileNotFoundError, match="down"):
+        store.get(1, "x.bin")
+    with pytest.raises(FileNotFoundError, match="down"):
+        store.get_range(1, "x.bin", 0, 1)
+    store.rejoin(1)
+    assert store.is_up(1)
+    assert not store.has(1, "y.bin")       # the dropped write never landed
+    assert not store.has(1, "x.bin")       # disk was wiped by the failure
+    store.put(1, "z.bin", b"back")
+    assert store.get(1, "z.bin") == b"back"
+
+
+# ---------------------------------------------------------------------------
+# manifest damage is reported, not a crash
+# ---------------------------------------------------------------------------
+
+
+def test_get_manifest_corrupt_replica_falls_through(tmp_path):
+    store = obj.NodeStore(str(tmp_path), N)
+    acfg = _acfg()
+    blocks = np.zeros((K, 128), dtype=np.uint8)
+    arc.hot_save(store, 1, blocks, acfg)
+    rel = arc.MANIFEST.format(step=1)
+    store.put(0, rel, b"{not json")
+    manifest = arc.get_manifest(store, 1)  # node 1's copy serves
+    assert manifest["step"] == 1
+
+
+def test_get_manifest_all_corrupt_raises_clear_valueerror(tmp_path):
+    store = obj.NodeStore(str(tmp_path), N)
+    acfg = _acfg()
+    arc.hot_save(store, 1, np.zeros((K, 128), dtype=np.uint8), acfg)
+    rel = arc.MANIFEST.format(step=1)
+    for i in range(N):
+        store.put(i, rel, b"{not json")
+    with pytest.raises(ValueError, match="every manifest replica is corrupt"):
+        arc.get_manifest(store, 1)
+    # valid JSON with missing keys is just as corrupt, named clearly
+    for i in range(N):
+        store.put(i, rel, json.dumps({"tier": "hot", "step": 1}).encode())
+    with pytest.raises(ValueError, match="missing required keys"):
+        arc.get_manifest(store, 1)
+    for i in range(N):
+        store.put(i, rel, json.dumps({"tier": "warm"}).encode())
+    with pytest.raises(ValueError, match="unknown"):
+        arc.get_manifest(store, 1)
+
+
+def test_list_steps_partial_and_garbage(tmp_path):
+    store = obj.NodeStore(str(tmp_path), N)
+    acfg = _acfg()
+    arc.hot_save(store, 1, np.zeros((K, 128), dtype=np.uint8), acfg)
+    assert arc.list_steps(store) == [1]
+    # a .tmp next to a published manifest is an interrupted put: harmless
+    store.put(0, "manifests/00000001.json.tmp", b"partial")
+    assert arc.list_steps(store) == [1]
+    # a step with ONLY a partial write is reported, not silently skipped
+    store.put(0, "manifests/00000007.json.tmp", b"partial")
+    with pytest.raises(ValueError, match="partially-written"):
+        arc.list_steps(store)
+    store.delete(0, "manifests/00000007.json.tmp")
+    store.put(2, "manifests/weird.txt", b"?")
+    with pytest.raises(ValueError, match="unrecognized file"):
+        arc.list_steps(store)
+
+
+def test_engine_reports_corrupt_manifest_as_scrub_error(tmp_path):
+    eng, _ = _engine(tmp_path / "e", 6, fail_rate=0.0, arrival_rate=1.0)
+    eng.run(6)
+    step = next(s for s, st in eng.objects.items()
+                if st["state"] in ("archived", "sealed"))
+    rel = arc.MANIFEST.format(step=step)
+    for i in range(N):
+        eng.store.put(i, rel, b"{broken")
+    eng.tick()                              # must not raise mid-soak
+    assert any(f"step {step}" in e for e in eng.scrub_errors)
+
+
+# ---------------------------------------------------------------------------
+# durability model
+# ---------------------------------------------------------------------------
+
+
+def test_monte_carlo_durability_deterministic_and_ordered():
+    kw = dict(ticks=200, trials=300, fail_rate=0.006, seed=0)
+    a = churn.monte_carlo_durability(**kw)
+    assert a == churn.monte_carlo_durability(**kw)
+    # the (16,11) code must not lose more than 3-replication here
+    assert a["p_loss_rapidraid"] <= a["p_loss_replication"]
+    assert a["overhead_rapidraid"] < a["overhead_replication"]
+    with pytest.raises(ValueError, match="replication"):
+        churn.monte_carlo_durability(replication=0)
+
+
+def test_engine_rejects_mismatched_trace_and_block_alignment(tmp_path):
+    trace = churn.bounded_trace(8, 5, 10)
+    with pytest.raises(ValueError, match="nodes"):
+        ClusterLifecycle(str(tmp_path), _acfg(), _lcfg(), trace)
+    trace = churn.bounded_trace(N, K, 10)
+    with pytest.raises(ValueError, match="multiple of 8"):
+        ClusterLifecycle(str(tmp_path), _acfg(),
+                         _lcfg(block_bytes=129), trace)
+
+
+def test_netsim_churn_config_slows_archival():
+    from benchmarks import netsim
+    cfg = netsim.NetConfig(n_nodes=16)
+    t0 = netsim.pipeline_time(netsim.churn_config(cfg, 0), n=16, k=11)
+    prev = t0
+    for r in (1, 2, 4):
+        t = netsim.pipeline_time(netsim.churn_config(cfg, r), n=16, k=11)
+        assert t >= prev           # repair traffic only ever slows archival
+        prev = t
+    assert prev > t0
