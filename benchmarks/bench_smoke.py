@@ -30,6 +30,7 @@ import time
 import jax
 
 from benchmarks import fig4_coding_times as fig4
+from benchmarks import fig_checkpoint as figc
 from benchmarks import fig_hetero
 from benchmarks import fig_lifecycle
 from benchmarks import fig_repair_times as figr
@@ -55,6 +56,11 @@ def extract_speedups(results: dict) -> dict[str, float]:
                 row["star_s"] / row["pipelined_s"])
     for row in results["model"]["hetero"]:
         sp[f"model_hetero_{row['slow_factor']}x"] = row["speedup"]
+    for row in results["model"].get("ckpt", []):
+        if row["arch"].startswith("grok"):
+            # replicated/coded checkpoint bytes at the grok-314b dry-run
+            # state shapes — deterministic (3.0x vs n/k + lane padding)
+            sp["model_ckpt_overhead"] = row["savings"]
     life = results["model"].get("lifecycle", {})
     if life:
         # paired Monte Carlo loss ratio (replication/RapidRAID, Laplace
@@ -81,6 +87,11 @@ def extract_speedups(results: dict) -> dict[str, float]:
     het = real.get("hetero_forced_slow", {})
     if "speedup" in het:
         sp["real_hetero_forced_slow"] = het["speedup"]
+    ck = real.get("ckpt", {})
+    if "repl_s" in ck:
+        # host-serialize + 3 replica writes vs the device-direct coded save
+        # (wall clock; storage-bytes win is the blocking model key above)
+        sp["real_ckpt_save"] = ck["repl_s"] / ck["coded_s"]
     thr = real.get("throughput", {})
     for op in ("encode", "decode", "repair", "encode_many"):
         if op in thr and "speedup" in thr[op]:
@@ -190,6 +201,7 @@ def main() -> int:
             "repair": figr.network_model(),
             "hetero": fig_hetero.network_model(),
             "lifecycle": fig_lifecycle.network_model(),
+            "ckpt": figc.model_overhead(),
         },
         "real": {},
     }
@@ -221,6 +233,10 @@ def main() -> int:
         real["lifecycle"] = fig_lifecycle.real_soak(ticks=25)
     except Exception as e:  # noqa: BLE001
         real["lifecycle"] = {"error": str(e)[:500]}
+    try:
+        real["ckpt"] = figc.real_ckpt(mb=4)
+    except Exception as e:  # noqa: BLE001
+        real["ckpt"] = {"error": str(e)[:500]}
     results["speedups"] = extract_speedups(results)
     results["meta"]["wall_s"] = round(time.time() - t0, 1)
     with open(args.out, "w") as f:
@@ -238,6 +254,10 @@ def main() -> int:
     # in the paired Monte Carlo, and the real soak must lose nothing
     life = results["model"]["lifecycle"]["durability"]
     ok = ok and life["p_loss_rapidraid"] <= life["p_loss_replication"]
+    # checkpoint gate: coded checkpoints must cost <= 1.5x storage where
+    # 3-replication costs 3.0x, at every zoo architecture's dry-run shapes
+    ok = ok and all(r["coded_overhead"] <= 1.5 and r["savings"] >= 2.0
+                    for r in results["model"]["ckpt"])
     if "error" not in real["lifecycle"]:
         ok = ok and real["lifecycle"]["lost_objects"] == 0
     failures: list[str] = []

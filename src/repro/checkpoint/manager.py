@@ -4,6 +4,13 @@ Lifecycle a 1000-node cluster would run (all simulated faithfully here):
 
   save(step, state)            -> hot tier: 2 replicas over n nodes
                                   (pipelined insertion layout, paper §V)
+  save_sharded(step, state, mesh)
+                               -> device-direct: flatten + erasure-code the
+                                  train state straight from device buffers
+                                  into the coded tier (repro.checkpoint.devio)
+  restore_sharded(step, like, mesh)
+                               -> decode + rebuild leaves in one cached
+                                  program; optional shardings re-place them
   archive(step)                -> RapidRAID pipelined migration; 2x -> 1.45x
   archive_many(steps)          -> batched migration: all steps encoded
                                   concurrently (staggered multi-chain /
@@ -41,6 +48,7 @@ class CheckpointConfig:
     seed: int = 0
     hot_keep: int = 2          # newest checkpoints kept hot (replicated)
     archive_old: bool = True   # migrate older checkpoints to RapidRAID
+    device_direct: bool = False  # save straight from device buffers (devio)
 
 
 class CheckpointManager:
@@ -64,6 +72,29 @@ class CheckpointManager:
         if self.ccfg.archive_old:
             self._migrate_old(node_speeds)
         return manifest
+
+    def save_sharded(self, step: int, state, mesh=None) -> dict:
+        """Device-direct save: flatten/pack + erasure-code ``state`` from its
+        device buffers in ONE cached program — no host blob, no hot
+        replicas; optimizer state is coded across the mesh instead of
+        replicated. ``mesh`` (the training mesh) maps shard p's device to
+        chain node p; without it (or with < n devices) the encode runs as a
+        fused kernel launch. Still bit-compatible with ``restore``."""
+        from repro.checkpoint import devio
+        manifest = devio.save_state(self.store, step, state, self.acfg,
+                                    mesh=mesh)
+        if self.ccfg.archive_old:
+            self._migrate_old()
+        return manifest
+
+    def restore_sharded(self, step: int, like, mesh=None, shardings=None):
+        """Decode + rebuild the state for ``step`` in one cached program.
+        ``like`` fixes tree/dtypes (jax leaves return on device); pass
+        ``shardings`` to re-place leaves — e.g. onto a smaller mesh after
+        failures. Tolerates n-k lost shards like ``restore``."""
+        from repro.checkpoint import devio
+        return devio.restore_state(self.store, step, like, self.acfg,
+                                   mesh=mesh, shardings=shardings)
 
     def archive(self, step: int, node_speeds=None) -> dict:
         return arc.archive_step(self.store, step, self.acfg,
@@ -99,12 +130,22 @@ class CheckpointManager:
 
     def restore_latest(self, like):
         """Newest restorable step (skips unrecoverable ones). Returns
-        (step, state) or (None, None)."""
-        for step in reversed(arc.list_steps(self.store)):
+        (step, state), or (None, None) when the store holds no checkpoints
+        at all (a fresh run). When steps EXIST but none is restorable —
+        too many shards lost, corrupt decodes — raises ValueError naming
+        the root, the available steps, and why each one failed, instead of
+        silently restarting the run from scratch."""
+        steps = arc.list_steps(self.store)
+        errors = []
+        for step in reversed(steps):
             try:
                 return step, self.restore(step, like)
-            except (FileNotFoundError, AssertionError):
-                continue
+            except (FileNotFoundError, AssertionError, ValueError) as e:
+                errors.append(f"step {step}: {type(e).__name__}: {e}")
+        if steps:
+            raise ValueError(
+                f"no restorable checkpoint under {self.ccfg.root!r} "
+                f"(available steps {steps}): " + "; ".join(errors))
         return None, None
 
     def read_range(self, step: int, offset: int, nbytes: int,
@@ -133,7 +174,13 @@ class CheckpointManager:
         return arc.list_steps(self.store)
 
     def tier(self, step: int) -> str:
-        return arc.get_manifest(self.store, step)["tier"]
+        try:
+            return arc.get_manifest(self.store, step)["tier"]
+        except FileNotFoundError:
+            raise ValueError(
+                f"unknown checkpoint step {step} under "
+                f"{self.ccfg.root!r}; available steps: "
+                f"{arc.list_steps(self.store)}") from None
 
 
 def place(tree, shardings):

@@ -71,6 +71,21 @@ def compile_counts() -> dict[str, int]:
     return out
 
 
+def entry_counts(entry: str) -> dict[str, int]:
+    """``compile_counts`` filtered to one entry point (``key[0] == entry``).
+
+    The checkpoint trace-count tests assert e.g. every ``"ckpt_save"``
+    program traced exactly once across repeated same-shaped saves, without
+    caring what other entry points the process compiled.
+    """
+    out = {}
+    for key, fn in _programs.items():
+        if isinstance(key, tuple) and key and key[0] == entry:
+            size = getattr(fn, "_cache_size", None)
+            out[repr(key)] = int(size()) if callable(size) else -1
+    return out
+
+
 def clear() -> None:
     """Drop every cached program and reset the counters (tests only)."""
     _programs.clear()

@@ -41,12 +41,8 @@ def run_training(cfg, ocfg: adamw.OptConfig, dcfg: data_lib.DataConfig,
     state_like = {"params": params, "opt": opt_state,
                   "step": np.int64(0)}
 
-    pspecs = sharding.param_specs(cfg, mesh, params)
-    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
-                          is_leaf=lambda x: isinstance(x, P))
-    oshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                          sharding.opt_specs(cfg, mesh, pspecs, ocfg),
-                          is_leaf=lambda x: isinstance(x, P))
+    sshard = sharding.state_shardings(cfg, mesh, state_like, ocfg)
+    pshard, oshard = sshard["params"], sshard["opt"]
     bshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
                           sharding.batch_specs(cfg, mesh),
                           is_leaf=lambda x: isinstance(x, P))
@@ -84,10 +80,17 @@ def run_training(cfg, ocfg: adamw.OptConfig, dcfg: data_lib.DataConfig,
                 f"gnorm={m['grad_norm']:.2f} lr={m['lr']:.2e} "
                 f"({time.time()-t0:.1f}s)")
         if ckpt is not None and save_every and (step + 1) % save_every == 0:
-            state = {"params": jax.tree.map(np.asarray, params),
-                     "opt": jax.tree.map(np.asarray, opt_state),
-                     "step": np.int64(step + 1)}
-            ckpt.save(step + 1, state)
+            if ckpt.ccfg.device_direct:
+                # flatten/pack/encode straight from the device buffers —
+                # no host mirror of params/opt is ever built
+                state = {"params": params, "opt": opt_state,
+                         "step": np.int64(step + 1)}
+                ckpt.save_sharded(step + 1, state, mesh=mesh)
+            else:
+                state = {"params": jax.tree.map(np.asarray, params),
+                         "opt": jax.tree.map(np.asarray, opt_state),
+                         "step": np.int64(step + 1)}
+                ckpt.save(step + 1, state)
             log(f"checkpoint saved at step {step + 1} "
                 f"(tiers: {[ckpt.tier(s) for s in ckpt.steps()]})")
     return {"history": history, "final_loss": history[-1]["loss"],
@@ -105,6 +108,9 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--save-every", type=int, default=0)
     ap.add_argument("--ckpt-root", default="")
+    ap.add_argument("--device-direct", action="store_true",
+                    help="erasure-code checkpoints straight from device "
+                         "buffers (no host blob, no hot replicas)")
     ap.add_argument("--data", default="", help="binary token corpus path")
     ap.add_argument("--compress-grads", action="store_true")
     args = ap.parse_args()
@@ -118,7 +124,8 @@ def main() -> None:
                                path=args.data or None)
     ckpt = None
     if args.ckpt_root:
-        ckpt = CheckpointManager(CheckpointConfig(root=args.ckpt_root))
+        ckpt = CheckpointManager(CheckpointConfig(
+            root=args.ckpt_root, device_direct=args.device_direct))
     out = run_training(cfg, ocfg, dcfg, args.steps, ckpt=ckpt,
                        save_every=args.save_every)
     print(f"done: final loss {out['final_loss']:.4f}")

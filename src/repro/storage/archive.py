@@ -738,6 +738,51 @@ def read_range(store: NodeStore, step: int, acfg: ArchiveConfig,
     return bytes(out)
 
 
+def publish_device_archive(store: NodeStore, step: int, acfg: ArchiveConfig,
+                           blocks: np.ndarray, coded: np.ndarray,
+                           blob_len: int, state_key: str | None = None
+                           ) -> dict:
+    """Place an already-encoded checkpoint (device-direct write path) into
+    the coded tier and publish its manifest.
+
+    ``repro.checkpoint.devio`` computes ``blocks`` (k, B) and ``coded``
+    (n, B) in ONE on-device program; this is the storage-side half — shard
+    placement (codeword row i on node i), digests for both the original
+    blocks (what host restore verifies decode against) and the coded blobs
+    (what liveness probes verify), and a manifest every existing reader —
+    ``restore_blocks`` / ``repair`` / ``read_range`` — consumes unchanged.
+    No hot replicas ever hit disk on this path.
+    """
+    if blocks.shape != (acfg.k, blocks.shape[1]) or blocks.dtype != np.uint8:
+        raise ValueError(f"blocks must be (k={acfg.k}, B) uint8, "
+                         f"got {blocks.shape} {blocks.dtype}")
+    if coded.shape != (acfg.n, blocks.shape[1]):
+        raise ValueError(f"coded must be (n={acfg.n}, B={blocks.shape[1]}), "
+                         f"got {coded.shape}")
+    orig_digests = [digest(blocks[j].tobytes()) for j in range(acfg.k)]
+    coded_blobs = [coded[i].tobytes() for i in range(acfg.n)]
+    for pos in range(acfg.n):
+        store.put(pos, ARC.format(step=step, i=pos), coded_blobs[pos])
+    manifest = {
+        "step": step, "tier": "archive", "n": acfg.n, "k": acfg.k,
+        "l": acfg.l, "seed": acfg.seed,
+        "block_bytes": int(blocks.shape[1]),
+        "digests": orig_digests,
+        # nominal hot placement (no replicas ever existed): keeps the
+        # manifest schema one shape across write paths
+        "placement": [list(h) for h in rapidraid.placement(acfg.n, acfg.k)],
+        "perm": list(range(acfg.n)),
+        "coded_digests": [digest(b) for b in coded_blobs],
+        "orig_digests": orig_digests,
+        "blob_len": int(blob_len),
+        "device_direct": True,
+    }
+    if state_key is not None:
+        manifest["state_key"] = state_key
+    _put_manifest(store, step, manifest)
+    return manifest
+
+
 # ---------------------------------------------------------------------------
 # manifests (replicated on every node)
 # ---------------------------------------------------------------------------

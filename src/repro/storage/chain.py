@@ -165,8 +165,17 @@ def _check_chunking(B: int, l: int, num_chunks: int, what: str) -> None:
             f"of whole uint32 lanes ({lanes} GF(2^{l}) words each)")
 
 
-def _build_encode(code: RapidRAIDCode, mesh: Mesh, num_chunks: int):
-    """One compiled program: words (k, B) -> codeword words (n, B), sharded."""
+def _encode_core(code: RapidRAIDCode, mesh: Mesh, num_chunks: int):
+    """Traceable encode: words (k, B) -> codeword words (n, B), sharded.
+
+    Returns a plain traceable function (placement gather + in-program
+    packing + the shard_map chain pipeline + unpacking) so larger jitted
+    programs — e.g. the device-direct checkpoint save in
+    ``repro.checkpoint.devio``, which flattens a train-state pytree to
+    blocks first — can embed the whole encode data plane without an extra
+    host round trip. ``_build_encode`` wraps it in ``jax.jit`` for the
+    standalone entry point.
+    """
     l = code.l
     idx, valid = placement_indices(code)
     bp_psi, bp_xi = bitplane_coeff_planes(code)
@@ -178,12 +187,16 @@ def _build_encode(code: RapidRAIDCode, mesh: Mesh, num_chunks: int):
     valid_j = jnp.asarray(valid[:, :, None])
     planes = (jnp.asarray(bp_psi), jnp.asarray(bp_xi))
 
-    @jax.jit
-    def program(data):
+    def encode(data):
         local = jnp.where(valid_j, data[idx_j], 0)      # (n, max_b, B)
         out_packed = fn(gf.pack_u32(local, l), *planes)  # (n, Bp)
         return gf.unpack_u32(out_packed, l)
-    return program
+    return encode
+
+
+def _build_encode(code: RapidRAIDCode, mesh: Mesh, num_chunks: int):
+    """One compiled program: words (k, B) -> codeword words (n, B), sharded."""
+    return jax.jit(_encode_core(code, mesh, num_chunks))
 
 
 def pipelined_encode(code: RapidRAIDCode, data, num_chunks: int = 8,
@@ -238,9 +251,16 @@ def _decode_shard(local, bp_node, *, k: int, l: int, num_chunks: int):
     return out[None]
 
 
-def _build_decode(code: RapidRAIDCode, ids: tuple[int, ...], mesh: Mesh,
-                  num_chunks: int):
-    """One compiled program: survivor words (n_alive, B) -> object (k, B)."""
+def _decode_core(code: RapidRAIDCode, ids: tuple[int, ...], mesh: Mesh,
+                 num_chunks: int):
+    """Traceable decode: survivor words (n_alive, B) -> object (k, B).
+
+    Like ``_encode_core``, returns a plain traceable function so larger
+    jitted programs (the device-direct checkpoint restore) can run the
+    pipelined decode and keep working on the result — leaf slicing,
+    bitcasting — without leaving the program. ``ids`` must be a decodable
+    survivor set (``decode_matrix`` raises otherwise, at build time).
+    """
     from repro.core import rapidraid as rr_lib
     l = code.l
     D = rr_lib.decode_matrix(code, list(ids))       # (k, n_alive), host, once
@@ -250,12 +270,17 @@ def _build_decode(code: RapidRAIDCode, ids: tuple[int, ...], mesh: Mesh,
     fn = compat.shard_map(body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
                           out_specs=P(AXIS))
 
-    @jax.jit
-    def program(shards):
+    def decode(shards):
         outs = fn(gf.pack_u32(shards, l), bp)       # (n_alive, k, Bp)
         # the LAST chain node holds the complete decoded object
         return gf.unpack_u32(outs[-1], l)
-    return program
+    return decode
+
+
+def _build_decode(code: RapidRAIDCode, ids: tuple[int, ...], mesh: Mesh,
+                  num_chunks: int):
+    """One compiled program: survivor words (n_alive, B) -> object (k, B)."""
+    return jax.jit(_decode_core(code, ids, mesh, num_chunks))
 
 
 def pipelined_decode(code: RapidRAIDCode, ids, shards, num_chunks: int = 8,

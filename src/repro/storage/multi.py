@@ -75,9 +75,11 @@ def _encode_many_shard(local, bp_psi, bp_xi, *, l: int, num_chunks: int,
     return out[None]
 
 
-def _build_encode_many(code: RapidRAIDCode, mesh, num_chunks: int,
-                       stagger: int):
-    """One compiled program: (B_obj, k, B) words -> (B_obj, n, B) words."""
+def _encode_many_core(code: RapidRAIDCode, mesh, num_chunks: int,
+                      stagger: int):
+    """Traceable batched encode (see ``chain._encode_core`` for the pattern):
+    (B_obj, k, B) words -> (B_obj, n, B) words, embeddable in larger jitted
+    programs."""
     l = code.l
     idx, valid = chain_lib.placement_indices(code)
     bp_psi, bp_xi = chain_lib.bitplane_coeff_planes(code)
@@ -90,14 +92,19 @@ def _build_encode_many(code: RapidRAIDCode, mesh, num_chunks: int,
     valid_j = jnp.asarray(valid[None, :, :, None])
     planes = (jnp.asarray(bp_psi), jnp.asarray(bp_xi))
 
-    @jax.jit
-    def program(objects):
+    def encode(objects):
         # replica placement per object, then node-major for the sharding
         local = jnp.where(valid_j, objects[:, idx_j], 0)  # (B_obj,n,max_b,B)
         local = local.transpose(1, 0, 2, 3)               # (n,B_obj,max_b,B)
         out = fn(gf.pack_u32(local, l), *planes)          # (n, B_obj, Bp)
         return gf.unpack_u32(out.transpose(1, 0, 2), l)
-    return program
+    return encode
+
+
+def _build_encode_many(code: RapidRAIDCode, mesh, num_chunks: int,
+                       stagger: int):
+    """One compiled program: (B_obj, k, B) words -> (B_obj, n, B) words."""
+    return jax.jit(_encode_many_core(code, mesh, num_chunks, stagger))
 
 
 def pipelined_encode_many(code: RapidRAIDCode, objects, num_chunks: int = 8,
@@ -151,9 +158,11 @@ def _decode_many_shard(local, bp_node, *, k: int, l: int, num_chunks: int,
     return out[None]
 
 
-def _build_decode_many(code: RapidRAIDCode, ids: tuple[int, ...], mesh,
-                       num_chunks: int, stagger: int):
-    """One compiled program: (B_obj, n_alive, B) -> (B_obj, k, B)."""
+def _decode_many_core(code: RapidRAIDCode, ids: tuple[int, ...], mesh,
+                      num_chunks: int, stagger: int):
+    """Traceable batched decode (see ``chain._decode_core`` for the pattern):
+    (B_obj, n_alive, B) -> (B_obj, k, B), embeddable in larger jitted
+    programs."""
     from repro.core import rapidraid as rr_lib
     l = code.l
     D = rr_lib.decode_matrix(code, list(ids))       # (k, n_alive), host, once
@@ -163,13 +172,18 @@ def _build_decode_many(code: RapidRAIDCode, ids: tuple[int, ...], mesh,
     fn = compat.shard_map(body, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
                           out_specs=P(AXIS))
 
-    @jax.jit
-    def program(shards):
+    def decode(shards):
         packed = gf.pack_u32(shards, l).transpose(1, 0, 2)  # (n_alive,B_obj,Bp)
         outs = fn(packed, bp)                       # (n_alive, B_obj, k, Bp)
         # the LAST chain node holds every object's decoded blocks
         return gf.unpack_u32(outs[-1], l)
-    return program
+    return decode
+
+
+def _build_decode_many(code: RapidRAIDCode, ids: tuple[int, ...], mesh,
+                       num_chunks: int, stagger: int):
+    """One compiled program: (B_obj, n_alive, B) -> (B_obj, k, B)."""
+    return jax.jit(_decode_many_core(code, ids, mesh, num_chunks, stagger))
 
 
 def pipelined_decode_many(code: RapidRAIDCode, ids, shards,

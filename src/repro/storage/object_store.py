@@ -27,29 +27,53 @@ MAGIC = b"RRCK"
 # ---------------------------------------------------------------------------
 
 
-def tree_to_bytes(tree) -> bytes:
-    import jax
-    leaves, treedef = jax.tree.flatten(tree)
+def leaf_metas(leaves) -> list[dict]:
+    """Header metadata ({dtype, shape, offset, nbytes}) for flattened leaves.
+
+    Shared by the host serializer (``tree_to_bytes``) and the device-direct
+    checkpoint packer (``repro.checkpoint.devio``), which must lay out BYTE-
+    IDENTICAL blobs so either side can restore the other's checkpoints.
+    dtype/shape come from the leaf's own attributes when present — no
+    device->host transfer for ``jax.Array`` leaves, and abstract leaves
+    (``jax.ShapeDtypeStruct`` templates) describe layouts without data.
+    """
     metas = []
-    bufs = []
     off = 0
     for idx, leaf in enumerate(leaves):
-        arr = np.asarray(leaf)
-        if arr.dtype.hasobject:
+        if hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+            dt, shape = np.dtype(leaf.dtype), tuple(leaf.shape)
+        else:
+            arr = np.asarray(leaf)
+            dt, shape = arr.dtype, arr.shape
+        if dt.hasobject:
             raise TypeError(
                 f"cannot serialize leaf {idx} of dtype object "
                 f"(type {type(leaf).__name__}): checkpoint leaves must be "
                 f"numeric/bool arrays with a fixed byte layout")
-        raw = np.ascontiguousarray(arr)
-        # bfloat16 etc: persist via uint8 view of the raw bytes
-        data = raw.view(np.uint8).reshape(-1)
-        metas.append({"dtype": str(arr.dtype), "shape": list(arr.shape),
-                      "offset": off, "nbytes": int(data.nbytes)})
-        bufs.append(data.tobytes())
-        off += data.nbytes
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+        metas.append({"dtype": str(dt), "shape": list(shape),
+                      "offset": off, "nbytes": int(nbytes)})
+        off += nbytes
+    return metas
+
+
+def tree_header(treedef, metas: list[dict]) -> bytes:
+    """Blob prefix: magic + header length + header JSON. The body (raw leaf
+    bytes at the metas' offsets) follows immediately after."""
     header = json.dumps({"treedef": str(treedef), "leaves": metas}).encode()
-    body = b"".join(bufs)
-    return (MAGIC + len(header).to_bytes(8, "little") + header + body)
+    return MAGIC + len(header).to_bytes(8, "little") + header
+
+
+def tree_to_bytes(tree) -> bytes:
+    import jax
+    leaves, treedef = jax.tree.flatten(tree)
+    metas = leaf_metas(leaves)
+    bufs = []
+    for leaf in leaves:
+        # bfloat16 etc: persist via uint8 view of the raw bytes
+        raw = np.ascontiguousarray(np.asarray(leaf))
+        bufs.append(raw.view(np.uint8).reshape(-1).tobytes())
+    return tree_header(treedef, metas) + b"".join(bufs)
 
 
 def bytes_to_leaves(blob: bytes, like_tree):
@@ -84,13 +108,19 @@ def bytes_to_leaves(blob: bytes, like_tree):
     return jax.tree.unflatten(treedef, out)
 
 
+def block_bytes_for(blob_len: int, k: int, lane_bytes: int = 8) -> int:
+    """Per-block byte length of a k-way split: ceil(blob_len / k) rounded up
+    to whole lanes. The device-direct packer sizes its in-program padding
+    with this so its blocks match ``split_blocks`` exactly."""
+    per = -(-blob_len // k)
+    return -(-per // lane_bytes) * lane_bytes
+
+
 def split_blocks(blob: bytes, k: int, lane_bytes: int = 8) -> np.ndarray:
     """(k, B) uint8 blocks, zero-padded so B is a lane multiple."""
-    n = len(blob)
-    per = -(-n // k)
-    per = -(-per // lane_bytes) * lane_bytes
+    per = block_bytes_for(len(blob), k, lane_bytes)
     buf = np.zeros(k * per, dtype=np.uint8)
-    buf[:n] = np.frombuffer(blob, dtype=np.uint8)
+    buf[:len(blob)] = np.frombuffer(blob, dtype=np.uint8)
     return buf.reshape(k, per)
 
 

@@ -217,6 +217,46 @@ def opt_specs(cfg, mesh: Mesh, pspecs, ocfg=None) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# train state (params + opt + step): checkpoint-facing layout
+# ---------------------------------------------------------------------------
+
+
+def state_specs(cfg, mesh: Mesh, state_shape, ocfg=None,
+                layout: str = "2d") -> dict:
+    """PartitionSpecs for a full train state {"params", "opt", "step"} —
+    the layout device-direct checkpointing archives from and elastic
+    restarts ``place()`` back onto."""
+    pspecs = param_specs(cfg, mesh, state_shape["params"], layout)
+    return {"params": pspecs,
+            "opt": opt_specs(cfg, mesh, pspecs, ocfg),
+            "step": P()}
+
+
+def state_shardings(cfg, mesh: Mesh, state_shape, ocfg=None,
+                    layout: str = "2d") -> dict:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        state_specs(cfg, mesh, state_shape, ocfg, layout),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def chain_order(mesh: Mesh, n: int) -> list[int] | None:
+    """Shard -> chain-node layout: the device order for an n-node archival
+    chain drawn from ``mesh``.
+
+    Chain position p is played by the p-th device of the mesh in row-major
+    axis order, so the coding chain follows the same device walk the
+    parameter shards live on (the shard a node holds is the shard it
+    combines — no cross-mesh shuffle before encoding). Returns None when
+    the mesh holds fewer than n devices; callers fall back to the fused
+    single-launch path.
+    """
+    devs = list(np.asarray(mesh.devices).reshape(-1))
+    if len(devs) < n:
+        return None
+    return [int(d.id) for d in devs[:n]]
+
+
+# ---------------------------------------------------------------------------
 # batches & caches
 # ---------------------------------------------------------------------------
 

@@ -170,3 +170,119 @@ def test_straggler_aware_archive(tmp_path):
     r = mgr.restore(3, s)
     np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
                                   s["params"]["w"])
+
+
+# ---------------------------------------------------------------------------
+# clear errors on empty / unrecoverable / unknown steps (regression)
+# ---------------------------------------------------------------------------
+
+
+def test_restore_latest_empty_store_is_fresh_run(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path)))
+    assert mgr.restore_latest(_state()) == (None, None)
+
+
+def test_restore_latest_unrecoverable_names_root_and_steps(tmp_path):
+    """Steps exist but none is restorable: restore_latest used to surface an
+    opaque failure (or silently restart); now it raises a ValueError naming
+    the root, the available steps, and why each one failed."""
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path),
+                                             hot_keep=0, archive_old=True))
+    mgr.save(4, _state())            # hot_keep=0 -> migrated to coded tier
+    for i in range(6):               # n-k+1 losses: beyond the budget
+        mgr.store.fail_node(i)
+    with pytest.raises(ValueError) as ei:
+        mgr.restore_latest(_state())
+    msg = str(ei.value)
+    assert str(tmp_path) in msg
+    assert "[4]" in msg and "step 4" in msg
+    assert "FileNotFoundError" in msg
+
+
+def test_tier_unknown_step_raises_valueerror(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path)))
+    mgr.save(2, _state())
+    assert mgr.tier(2) == "hot"
+    with pytest.raises(ValueError, match=r"unknown checkpoint step 9"):
+        mgr.tier(9)
+    with pytest.raises(ValueError, match=r"available steps: \[2\]"):
+        mgr.tier(9)
+
+
+# ---------------------------------------------------------------------------
+# codec round-trip property: random pytrees, mixed dtypes, ragged shapes
+# ---------------------------------------------------------------------------
+
+
+_leaf_dtypes = st.sampled_from([np.float32, np.dtype(jnp.bfloat16),
+                                np.int32, np.uint8])
+_leaf_shapes = st.lists(st.integers(0, 7), min_size=0, max_size=3).map(tuple)
+
+
+@st.composite
+def _leaves(draw):
+    dt = np.dtype(draw(_leaf_dtypes))
+    shape = draw(_leaf_shapes)           # may be () or contain 0s (empty)
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    return rng.integers(0, 256, size=(int(np.prod(shape)) * dt.itemsize,),
+                        dtype=np.uint8).view(dt).reshape(shape)
+
+
+@hypothesis.given(tree=st.recursive(
+    _leaves(),
+    lambda kids: st.dictionaries(st.sampled_from("abcdef"), kids,
+                                 min_size=1, max_size=3),
+    max_leaves=8))
+def test_codec_roundtrip_property(tree):
+    """tree_to_bytes/bytes_to_leaves is the identity over arbitrary pytrees
+    with mixed f32/bf16/i32/u8 dtypes, ragged and empty leaves."""
+    blob = obj.tree_to_bytes(tree)
+    back = obj.bytes_to_leaves(blob, tree)
+    gl, gt = jax.tree.flatten(back)
+    wl, wt = jax.tree.flatten(tree)
+    assert gt == wt
+    for g, w in zip(gl, wl):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.dtype == w.dtype and g.shape == w.shape
+        assert g.tobytes() == w.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# device-direct save path stays byte-compatible with the host codec
+# ---------------------------------------------------------------------------
+
+
+def test_device_direct_save_reads_back_through_host_path(tmp_path):
+    """save_sharded writes a blob byte-identical to tree_to_bytes: the plain
+    host restore (and read_range) must serve it unchanged."""
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path),
+                                             archive_old=False))
+    s = _state(3)
+    manifest = mgr.save_sharded(8, s)
+    assert manifest["device_direct"] and mgr.tier(8) == "archive"
+    r = mgr.restore(8, s)                 # host decode path
+    for a, b in zip(jax.tree.leaves(r), jax.tree.leaves(s)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    blob = obj.tree_to_bytes(s)
+    assert mgr.read_range(8, 0, len(blob)) == blob
+
+
+def test_host_save_reads_back_through_device_path(tmp_path):
+    """...and restore_sharded reads host-written checkpoints, hot or coded."""
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path), hot_keep=0))
+    s = _state(4)
+    mgr.save(6, s)                        # hot_keep=0 -> archived (coded)
+    assert mgr.tier(6) == "archive"
+    r = mgr.restore_sharded(6, s)
+    for a, b in zip(jax.tree.leaves(r), jax.tree.leaves(s)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_restore_sharded_template_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path),
+                                             archive_old=False))
+    s = _state(5)
+    mgr.save_sharded(2, s)
+    wrong = dict(s, step=np.int32(0))     # different layout, same-ish tree
+    with pytest.raises(ValueError, match="template"):
+        mgr.restore_sharded(2, wrong)

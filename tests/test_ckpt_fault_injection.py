@@ -1,0 +1,300 @@
+"""Fault-injection harness for the checkpoint subsystem.
+
+Parameterizes (loss count 1..n-k) x (loss timing: before the save / between
+hot save and archival migration / after everything is durable) x (tier: hot
+replicated / erasure-coded device-direct) over a ``ChurnNodeStore`` — down
+nodes drop writes and fail reads, exactly like a host that fell off the
+network — and asserts every recovered train state is BIT-exact.
+
+The headline test runs a real (smoke-config) training loop: step to a
+checkpoint, ``save_sharded`` straight from the device buffers, kill nodes,
+restore degraded, heal the dead hosts' shards via pipelined repair, resume
+training, and compare against an uninterrupted run byte for byte.
+
+``CKPT_SOAK_ITERS`` scales the randomized soak (nightly runs it at 150+).
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+from repro.storage import archive as arc
+from repro.storage import object_store as obj
+
+from tests.subproc import run_with_devices
+
+N, K = 16, 11          # default geometry: loss budget n-k = 5
+
+CASES = [
+    ("hot", "save"),        # nodes die BEFORE the save: writes are dropped
+    ("hot", "restore"),     # nodes die after the save is durable
+    ("coded", "save"),      # device-direct save into a degraded cluster
+    ("coded", "archive"),   # die between the hot save and the migration
+    ("coded", "restore"),   # archived, then lose shards
+]
+
+
+def _mixed_state(seed: int):
+    """Small train-state-shaped pytree: device f32/bf16/i32 + host int64."""
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": jnp.asarray(rng.standard_normal((24, 16)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal(17), jnp.bfloat16),
+        },
+        "opt": {
+            "m": jnp.asarray(rng.standard_normal((24, 16)), jnp.float32),
+            "v": jnp.asarray(rng.standard_normal((24, 16)), jnp.float32),
+            "count": jnp.asarray(int(rng.integers(100)), jnp.int32),
+        },
+        "step": np.int64(int(rng.integers(1 << 40))),
+    }
+
+
+def _assert_tree_equal(got, want):
+    gl, gt = jax.tree.flatten(got)
+    wl, wt = jax.tree.flatten(want)
+    assert gt == wt
+    for g, w in zip(gl, wl):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.dtype == w.dtype and g.shape == w.shape
+        assert g.tobytes() == w.tobytes()
+
+
+def _churn_manager(root: str) -> CheckpointManager:
+    mgr = CheckpointManager(CheckpointConfig(root=root, archive_old=False))
+    mgr.store = obj.ChurnNodeStore(root, N)
+    return mgr
+
+
+def _losses(rng, n_lost: int, hot_safe: bool) -> list[int]:
+    """Random distinct loss set; ``hot_safe`` rejects sets that would kill
+    BOTH replicas of some hot block (block j lives on nodes j and n-k+j) —
+    the hot tier's stated tolerance is one replica set, not any-5."""
+    while True:
+        s = sorted(rng.choice(N, n_lost, replace=False).tolist())
+        if not hot_safe:
+            return s
+        held = set(s)
+        if not any(j in held and j + (N - K) in held for j in range(K)):
+            return s
+
+
+def _run_case(root: str, tier: str, timing: str, losses: list[int],
+              seed: int) -> None:
+    """One injection scenario: write under/around failures, recover degraded,
+    heal via pipelined repair, recover again — bit-exact every time."""
+    mgr = _churn_manager(root)
+    state = _mixed_state(seed)
+    step = 7
+
+    if timing == "save":
+        for i in losses:
+            mgr.store.fail(i)
+    if tier == "hot":
+        mgr.save(step, state)
+    elif timing == "archive":
+        mgr.save(step, state)          # hot write lands everywhere...
+        for i in losses:
+            mgr.store.fail(i)          # ...then hosts die mid-migration
+        mgr.archive(step)
+    else:
+        mgr.save_sharded(step, state)  # device-direct straight to coded
+    if timing == "restore":
+        for i in losses:
+            mgr.store.fail(i)
+
+    # degraded recovery while the nodes are still down, via both read paths
+    _assert_tree_equal(mgr.restore(step, state), state)
+    _assert_tree_equal(mgr.restore_sharded(step, state), state)
+
+    # the dead hosts rejoin with empty disks; pipelined repair refills
+    # exactly the shards they lost (coded tier only — hot re-replication is
+    # the lifecycle scrubber's job)
+    for i in losses:
+        mgr.store.rejoin(i)
+    if tier == "coded":
+        perm = arc.get_manifest(mgr.store, step)["perm"]
+        missing = [p for p in range(N) if not mgr.store.has(
+            perm[p], arc.ARC.format(step=step, i=p))]
+        assert mgr.repair(step) == missing
+        assert all(mgr.store.has(perm[p], arc.ARC.format(step=step, i=p))
+                   for p in range(N))
+        _assert_tree_equal(mgr.restore_sharded(step, state), state)
+    _assert_tree_equal(mgr.restore(step, state), state)
+
+
+@pytest.mark.parametrize("n_lost", [1, 2, 3, 4, 5])
+@pytest.mark.parametrize("tier,timing", CASES,
+                         ids=[f"{t}-{w}" for t, w in CASES])
+def test_recovery_grid(tmp_path, tier, timing, n_lost):
+    rng = np.random.default_rng(100 + n_lost)
+    losses = _losses(rng, n_lost,
+                     hot_safe=(tier == "hot" or timing == "archive"))
+    _run_case(str(tmp_path), tier, timing, losses, seed=n_lost)
+
+
+def test_loss_beyond_budget_raises_clearly(tmp_path):
+    """n-k+1 lost shards: restore raises (never returns corrupt data) and
+    restore_latest names the root and the unrecoverable step."""
+    mgr = _churn_manager(str(tmp_path))
+    state = _mixed_state(0)
+    mgr.save_sharded(3, state)
+    for i in range(N - K + 1):
+        mgr.store.fail(i)
+    with pytest.raises(FileNotFoundError, match=r"only 10 of n=16"):
+        mgr.restore_sharded(3, state)
+    with pytest.raises(ValueError, match=r"no restorable checkpoint"):
+        mgr.restore_latest(state)
+
+
+# ---------------------------------------------------------------------------
+# mid-run recovery: train -> device-direct save -> kill hosts -> heal -> resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def trainer():
+    """Smoke-config training run with a device-direct checkpoint at step 3
+    and the uninterrupted reference state at step 5."""
+    from repro.configs import get_config
+    from repro.data import pipeline as data_lib
+    from repro.models import model as model_lib
+    from repro.optim import adamw
+    from repro.train import steps
+
+    cfg = dataclasses.replace(get_config("qwen3-1.7b", smoke=True), vocab=97)
+    ocfg = adamw.OptConfig(peak_lr=1e-3, warmup_steps=2, total_steps=8)
+    dcfg = data_lib.DataConfig(vocab=97, seq=16, global_batch=2)
+    source = data_lib.make_source(dcfg)
+    step_fn = jax.jit(steps.build_train_step(cfg, ocfg))
+
+    def run(params, opt, lo, hi):
+        for s in range(lo, hi):
+            params, opt, _ = step_fn(params, opt,
+                                     data_lib.batch_for(cfg, source, s))
+        return params, opt
+
+    params = model_lib.init(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_opt(params, ocfg)
+    p3, o3 = run(params, opt, 0, 3)
+    state3 = {"params": p3, "opt": o3, "step": np.int64(3)}
+    p5, o5 = run(p3, o3, 3, 5)
+    ref5 = {"params": jax.tree.map(np.asarray, p5),
+            "opt": jax.tree.map(np.asarray, o5)}
+
+    class T:
+        pass
+
+    t = T()
+    t.state3, t.ref5, t.run = state3, ref5, run
+    return t
+
+
+@pytest.mark.parametrize("n_lost", [1, 2, 3, 4, 5])
+def test_mid_run_node_failure_recovery(tmp_path, trainer, n_lost):
+    """Fail hosts mid-"training run", heal their shards via pipelined
+    repair, resume — the continued run is bit-identical to one that never
+    lost a node."""
+    mgr = _churn_manager(str(tmp_path))
+    mgr.save_sharded(3, trainer.state3)
+
+    losses = sorted(np.random.default_rng(n_lost)
+                    .choice(N, n_lost, replace=False).tolist())
+    for i in losses:
+        mgr.store.fail(i)
+
+    # resume degraded (down to exactly k survivors at n_lost = 5)
+    got = mgr.restore_sharded(3, trainer.state3)
+    assert int(got["step"]) == 3
+    p, o = trainer.run(got["params"], got["opt"], int(got["step"]), 5)
+    _assert_tree_equal({"params": jax.tree.map(np.asarray, p),
+                        "opt": jax.tree.map(np.asarray, o)}, trainer.ref5)
+
+    # the failed hosts come back empty; pipelined repair restores their
+    # shards, after which the checkpoint is back to full n-of-16 redundancy
+    for i in losses:
+        mgr.store.rejoin(i)
+    assert mgr.repair(3) == losses
+    got2 = mgr.restore_sharded(3, trainer.state3)
+    _assert_tree_equal(got2, trainer.state3)
+
+
+# ---------------------------------------------------------------------------
+# randomized soak (CKPT_SOAK_ITERS scales it up for nightly)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fault_injection_soak(tmp_path):
+    iters = int(os.environ.get("CKPT_SOAK_ITERS", "6"))
+    rng = np.random.default_rng(20260808)
+    for it in range(iters):
+        tier, timing = CASES[int(rng.integers(len(CASES)))]
+        n_lost = int(rng.integers(1, N - K + 1))
+        losses = _losses(rng, n_lost,
+                         hot_safe=(tier == "hot" or timing == "archive"))
+        _run_case(str(tmp_path / f"it{it:04d}"), tier, timing, losses,
+                  seed=it)
+
+
+# ---------------------------------------------------------------------------
+# elasticity: save on a 16-device mesh, restore onto a smaller one
+# ---------------------------------------------------------------------------
+
+
+ELASTIC_SNIPPET = """
+import tempfile
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager, place
+
+mesh16 = Mesh(np.asarray(jax.devices()).reshape(4, 4), ("data", "model"))
+sh16 = NamedSharding(mesh16, P("data", "model"))
+rng = np.random.default_rng(0)
+w = rng.standard_normal((16, 8)).astype(np.float32)
+m = rng.standard_normal((16, 8)).astype(np.float32)
+state = {"params": {"w": jax.device_put(w, sh16)},
+         "opt": {"m": jax.device_put(m, sh16),
+                 "count": jnp.asarray(9, jnp.int32)},
+         "step": np.int64(4)}
+mgr = CheckpointManager(CheckpointConfig(root=tempfile.mkdtemp(),
+                                         archive_old=False))
+mgr.save_sharded(4, state, mesh=mesh16)           # chain path, 16 devices
+for i in (1, 6, 12):
+    mgr.store.fail_node(i)
+
+# the cluster shrank: restore + place() onto a 2x2 mesh of the survivors
+mesh4 = Mesh(np.asarray(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+sh4 = NamedSharding(mesh4, P("data", "model"))
+back = mgr.restore_sharded(4, state)
+assert int(back["step"]) == 4
+placed = place(
+    {"params": back["params"], "opt": back["opt"]},
+    {"params": {"w": sh4},
+     "opt": {"m": sh4, "count": NamedSharding(mesh4, P())}})
+pw = placed["params"]["w"]
+assert pw.sharding.is_equivalent_to(sh4, pw.ndim), pw.sharding
+assert placed["opt"]["m"].sharding.is_equivalent_to(sh4, 2)
+np.testing.assert_array_equal(np.asarray(pw), w)
+np.testing.assert_array_equal(np.asarray(placed["opt"]["m"]), m)
+assert int(placed["opt"]["count"]) == 9
+
+# restore_sharded's shardings arg does the re-placement in one call
+state2 = {"w": jax.device_put(w, sh16)}
+mgr.save_sharded(5, state2, mesh=mesh16)
+back2 = mgr.restore_sharded(5, state2, shardings={"w": sh4})
+assert back2["w"].sharding.is_equivalent_to(sh4, 2), back2["w"].sharding
+np.testing.assert_array_equal(np.asarray(back2["w"]), w)
+print("ELASTIC-OK")
+"""
+
+
+@pytest.mark.multidevice
+def test_elastic_restore_onto_smaller_mesh():
+    out = run_with_devices(ELASTIC_SNIPPET, ndev=16)
+    assert "ELASTIC-OK" in out

@@ -236,3 +236,96 @@ def test_measure_compute_rates_cached_kernel():
         # the repeat calibration added NO traced signatures
         assert fn._cache_size() == size_after_first
     assert len(r1) == len(r2) == 1 and all(v > 0 for v in r1 + r2)
+
+
+# ---------------------------------------------------------------------------
+# device-direct checkpoint programs: one trace per (code, layout, shapes) key
+# ---------------------------------------------------------------------------
+
+
+def test_device_direct_ckpt_traces_once(tmp_path):
+    """Repeated same-shaped save_sharded/restore_sharded calls reuse ONE
+    compiled program (fused single-host path)."""
+    import jax.numpy as jnp
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+    from repro.core import jitcache
+
+    mgr = CheckpointManager(CheckpointConfig(root=str(tmp_path),
+                                             archive_old=False))
+
+    def state(seed):
+        rng = np.random.default_rng(seed)
+        return {"w": jnp.asarray(rng.standard_normal((24, 16)), jnp.float32),
+                "c": jnp.asarray(int(rng.integers(100)), jnp.int32),
+                "step": np.int64(seed)}
+
+    mgr.save_sharded(1, state(1))
+    before = jitcache.stats()
+    mgr.save_sharded(2, state(2))
+    mgr.save_sharded(3, state(3))
+    after = jitcache.stats()
+    assert after["misses"] == before["misses"], (before, after)
+    assert after["hits"] >= before["hits"] + 2
+
+    mgr.restore_sharded(1, state(0))
+    before = jitcache.stats()
+    r2 = mgr.restore_sharded(2, state(0))
+    after = jitcache.stats()
+    assert after["misses"] == before["misses"], (before, after)
+    np.testing.assert_array_equal(np.asarray(r2["w"]),
+                                  np.asarray(state(2)["w"]))
+    assert int(r2["step"]) == 2
+
+    for entry in ("ckpt_save", "ckpt_restore"):
+        counts = jitcache.entry_counts(entry)
+        assert counts and all(v in (1, -1) for v in counts.values()), (
+            entry, counts)
+
+
+CKPT_TRACE_SNIPPET = """
+import tempfile
+import numpy as np, jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+from repro.core import jitcache
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(4, 4), ("data", "model"))
+sh = NamedSharding(mesh, P("data", "model"))
+mgr = CheckpointManager(CheckpointConfig(root=tempfile.mkdtemp(),
+                                         archive_old=False))
+
+def state(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": jax.device_put(
+                rng.standard_normal((16, 8)).astype(np.float32), sh),
+            "step": np.int64(seed)}
+
+mgr.save_sharded(1, state(1), mesh=mesh)      # chain path: 16-device encode
+before = jitcache.stats()
+mgr.save_sharded(2, state(2), mesh=mesh)
+mgr.save_sharded(3, state(3), mesh=mesh)
+after = jitcache.stats()
+assert after["misses"] == before["misses"], (before, after)
+assert after["hits"] >= before["hits"] + 2
+
+mgr.restore_sharded(1, state(0), mesh=mesh)
+before = jitcache.stats()
+r2 = mgr.restore_sharded(2, state(0), mesh=mesh)
+after = jitcache.stats()
+assert after["misses"] == before["misses"], (before, after)
+np.testing.assert_array_equal(np.asarray(r2["w"]), np.asarray(state(2)["w"]))
+assert int(r2["step"]) == 2
+
+for entry in ("ckpt_save", "ckpt_restore"):
+    counts = jitcache.entry_counts(entry)
+    assert counts and all(v in (1, -1) for v in counts.values()), (
+        entry, counts)
+print("CKPT-TRACE-OK", jitcache.stats())
+"""
+
+
+@pytest.mark.multidevice
+def test_device_direct_ckpt_chain_traces_once():
+    """Chain-path (training-mesh) saves/restores also compile once per key."""
+    out = run_with_devices(CKPT_TRACE_SNIPPET, ndev=16)
+    assert "CKPT-TRACE-OK" in out
