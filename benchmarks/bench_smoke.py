@@ -31,6 +31,7 @@ import jax
 
 from benchmarks import fig4_coding_times as fig4
 from benchmarks import fig_checkpoint as figc
+from benchmarks import fig_codes
 from benchmarks import fig_hetero
 from benchmarks import fig_lifecycle
 from benchmarks import fig_repair_times as figr
@@ -61,6 +62,12 @@ def extract_speedups(results: dict) -> dict[str, float]:
             # replicated/coded checkpoint bytes at the grok-314b dry-run
             # state shapes — deterministic (3.0x vs n/k + lane padding)
             sp["model_ckpt_overhead"] = row["savings"]
+    cc = results["model"].get("codes", {}).get("montecarlo", {})
+    for key, val in cc.items():
+        # durability + repair-traffic ratios vs RapidRAID, one seeded
+        # failure process for every family — deterministic, so blocking
+        if "ratio" in key:
+            sp[f"model_code_compare_{key}"] = val
     life = results["model"].get("lifecycle", {})
     if life:
         # paired Monte Carlo loss ratio (replication/RapidRAID, Laplace
@@ -201,6 +208,7 @@ def main() -> int:
             "repair": figr.network_model(),
             "hetero": fig_hetero.network_model(),
             "lifecycle": fig_lifecycle.network_model(),
+            "codes": fig_codes.network_model(),
             "ckpt": figc.model_overhead(),
         },
         "real": {},
@@ -237,6 +245,10 @@ def main() -> int:
         real["ckpt"] = figc.real_ckpt(mb=4)
     except Exception as e:  # noqa: BLE001
         real["ckpt"] = {"error": str(e)[:500]}
+    try:
+        real["codes_soak"] = fig_codes.real_soak(ticks=25)
+    except Exception as e:  # noqa: BLE001
+        real["codes_soak"] = {"error": str(e)[:500]}
     results["speedups"] = extract_speedups(results)
     results["meta"]["wall_s"] = round(time.time() - t0, 1)
     with open(args.out, "w") as f:

@@ -22,7 +22,7 @@ import jax
 from repro.core import rapidraid
 from repro.storage import chain
 
-code = rapidraid.make_code(16, 11, l=16, seed=0)
+code = rapidraid.RapidRAIDCode.make(16, 11, l=16, seed=0)
 rng = np.random.default_rng(0)
 data = rng.integers(0, 1 << 16, size=(11, 131072)).astype(np.uint16)  # 2.9MB
 

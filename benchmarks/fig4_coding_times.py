@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from repro.core import gf, rapidraid
 from repro.storage import atomic, chain
 
-code = rapidraid.make_code(16, 11, l=16, seed=0)
+code = rapidraid.RapidRAIDCode.make(16, 11, l=16, seed=0)
 rng = np.random.default_rng(0)
 data = rng.integers(0, 1 << 16, size=(11, {nwords})).astype(np.uint16)
 
@@ -88,7 +88,7 @@ from repro.kernels.gf_encode import ops
 from repro.storage import chain, multi
 
 B_OBJ, NC = {b_obj}, 4
-code = rapidraid.make_code(16, 11, l=16, seed=0)
+code = rapidraid.RapidRAIDCode.make(16, 11, l=16, seed=0)
 rng = np.random.default_rng(0)
 objs = rng.integers(0, 1 << 16, size=(B_OBJ, 11, {nwords})).astype(np.uint16)
 

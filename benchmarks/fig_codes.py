@@ -1,0 +1,134 @@
+"""Code-family comparison: durability / repair traffic / storage overhead.
+
+The paper's RapidRAID code is one point in the replication-vs-coding design
+space; Local Reconstruction Codes (Huang et al.) and regenerating codes
+(Dimakis et al., PAPERS.md) occupy the two other classic corners. With the
+abstract ``ErasureCode`` API every family runs through the SAME data plane,
+so the comparison is apples-to-apples:
+
+A. **Static geometry** — per family: storage overhead, repair fan-in,
+   repair transfer (words read to heal ONE lost shard of a k*B-word
+   object), and the worst-case loss pattern tolerated. The headline
+   triangle: RapidRAID is MDS with chain-pipelined encode but pays k full
+   shard reads per repair; LRC halves the repair reads (one local group)
+   but is not MDS; MBR pulls one beta sub-block from each of d helpers —
+   about ONE shard of total repair traffic — but stores n*alpha/M_sub.
+
+B. **Monte Carlo durability under churn** — ``monte_carlo_code_compare``:
+   one seeded node-failure process drives all families, loss = survivor
+   set not decodable *for that family* (code-aware, not a shard count).
+   Deterministic given the seed — the blocking ``model_code_compare_*``
+   CI keys come from here.
+
+C. **Real temperature-aware soak** — the lifecycle engine with a
+   ``CodePolicy`` (warm objects -> LRC, cold -> RapidRAID) over a bounded
+   churn trace: both families co-exist in one cluster, every object
+   digest-verifies at the end, zero losses.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.util import emit
+from repro.core import churn as churn_lib
+from repro.core import codes, scheduler
+from repro.storage import archive as arc
+from repro.storage.lifecycle import ClusterLifecycle, LifecycleConfig
+
+FAMILIES = ("rapidraid", "lrc", "mbr")
+
+
+def geometry_rows(n: int = 8, k: int = 4, l: int = 16,
+                  block_words: int = 1024) -> list[dict]:
+    """Part A: the static overhead/locality/bandwidth triangle."""
+    rows = []
+    for fam in FAMILIES:
+        code = codes.make(fam, n, k, l=l)
+        helpers = code.repair_helpers([0], list(range(1, n)))
+        rows.append({
+            "family": fam, "n": n, "k": k,
+            "storage_overhead": round(code.storage_overhead, 4),
+            "shard_words": code.shard_words(block_words),
+            "repair_fanin": len(helpers),
+            "repair_words": code.repair_transfer_words(block_words),
+            "repair_vs_object": round(
+                code.repair_transfer_words(block_words) / (k * block_words),
+                3),
+            "max_tolerated_losses": code.max_tolerated_losses(),
+            "mds": code.max_tolerated_losses() == n - k,
+        })
+    return rows
+
+
+def network_model(n: int = 8, k: int = 4) -> dict:
+    """Deterministic model results (blocking CI keys derive from these)."""
+    return {
+        "geometry": geometry_rows(n, k),
+        "montecarlo": churn_lib.monte_carlo_code_compare(
+            families=FAMILIES, n=n, k=k, ticks=300, trials=400,
+            fail_rate=0.02, repair_ticks=3, seed=0),
+    }
+
+
+def real_soak(ticks: int = 40, n: int = 6, k: int = 3, seed: int = 0,
+              fail_rate: float = 0.015, arrival_rate: float = 3.0,
+              cold_age: int = 6) -> dict:
+    """Part C: the engine under a CodePolicy — mixed families, zero loss."""
+    acfg = arc.ArchiveConfig(n=n, k=k, l=16, num_chunks=4)
+    policy = scheduler.CodePolicy(hot_family="lrc", cold_family="rapidraid",
+                                  cold_age=cold_age)
+    lcfg = LifecycleConfig(arrival_rate=arrival_rate, block_bytes=256,
+                           archive_age=3, batch_max=2, seed=seed,
+                           code_policy=policy)
+    trace = churn_lib.bounded_trace(n, k, ticks, fail_rate=fail_rate,
+                                    seed=seed)
+    t0 = time.time()
+    with tempfile.TemporaryDirectory() as root:
+        eng = ClusterLifecycle(root, acfg, lcfg, trace)
+        eng.run(ticks)
+        restored = eng.verify_all()
+        fams: dict[str, int] = {}
+        for step, st in eng.objects.items():
+            if st["state"] in ("archived", "sealed"):
+                fam = arc.get_manifest(eng.store, step)["family"]
+                fams[fam] = fams.get(fam, 0) + 1
+        s = eng.summary()
+    return {
+        "ticks": ticks, "n": n, "k": k, "seed": seed,
+        "policy": {"hot": policy.hot_family, "cold": policy.cold_family,
+                   "cold_age": policy.cold_age},
+        "objects": s["objects"], "restored_verified": restored,
+        "lost_objects": s["lost_objects"],
+        "archived_by_family": fams,
+        "repaired_shards": s["total_repaired_shards"],
+        "wall_s": round(time.time() - t0, 2),
+    }
+
+
+def main() -> None:
+    print("== Code families: durability / repair traffic / storage ==")
+    print("-- A: static geometry (one lost shard of a k*B object)")
+    for row in geometry_rows():
+        emit("codes_geometry", row)
+
+    print("-- B: Monte Carlo durability under one shared churn process")
+    mc = network_model()["montecarlo"]
+    for fam, r in mc["per_family"].items():
+        emit("codes_montecarlo", {"family": fam, **r})
+    for key in sorted(mc):
+        if "ratio" in key:
+            emit("codes_ratio", {"key": key, "value": mc[key]})
+
+    print("-- C: temperature-aware lifecycle soak (LRC warm, RapidRAID cold)")
+    soak = real_soak()
+    emit("codes_soak", {k2: v for k2, v in soak.items()
+                        if not isinstance(v, dict)})
+    emit("codes_soak_families", soak["archived_by_family"])
+    assert soak["lost_objects"] == 0, soak
+    print(f"soak: {soak['objects']} objects, "
+          f"{soak['archived_by_family']} archived, zero lost")
+
+
+if __name__ == "__main__":
+    main()

@@ -113,7 +113,7 @@ def real_forced_slow(n: int = 8, k: int = 5, slow: int = 3, factor: int = 4,
                      nwords: int = 1 << 14, num_chunks: int = 8,
                      iters: int = 3) -> dict:
     """Wall-clock: naive in-order vs scheduler placement, slow node forced."""
-    code = rapidraid.make_code(n, k, l=16, seed=0)
+    code = rapidraid.RapidRAIDCode.make(n, k, l=16, seed=0)
     rng = np.random.default_rng(0)
     data = rng.integers(0, 1 << 16, size=(k, nwords)).astype(np.uint16)
     reps = np.ones(n, dtype=int)
@@ -134,7 +134,7 @@ def real_forced_slow(n: int = 8, k: int = 5, slow: int = 3, factor: int = 4,
             t0 = time.perf_counter()
             out = hetero_encode_host(code, data, nc, order, reps)
             ts.append(time.perf_counter() - t0)
-        np.testing.assert_array_equal(out, rapidraid.encode_np(code, data))
+        np.testing.assert_array_equal(out, code.encode_np(data))
         return sorted(ts)[len(ts) // 2]
 
     t_naive = timed(naive, num_chunks)

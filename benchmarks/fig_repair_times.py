@@ -38,10 +38,10 @@ from repro.core import gf, rapidraid as rr
 from repro.storage import repair as rep
 
 n, k, l, nwords, nc, n_lost = {n}, {k}, {l}, {nwords}, {nc}, {n_lost}
-code = rr.make_code(n, k, l=l, seed=0)
+code = rr.RapidRAIDCode.make(n, k, l=l, seed=0)
 rng = np.random.default_rng(0)
 data = rng.integers(0, 1 << l, size=(k, nwords)).astype(gf.WORD_DTYPE[l])
-cw = rr.encode_np(code, data)
+cw = code.encode_np(data)
 missing = list(range(n_lost))
 ids = [i for i in range(n) if i not in missing]
 
@@ -68,10 +68,10 @@ from repro.core import gf, rapidraid as rr
 from repro.storage import repair as rep
 
 n, k, l, nwords, nc, b_obj = {n}, {k}, {l}, {nwords}, {nc}, {b_obj}
-code = rr.make_code(n, k, l=l, seed=0)
+code = rr.RapidRAIDCode.make(n, k, l=l, seed=0)
 rng = np.random.default_rng(0)
 objs = rng.integers(0, 1 << l, size=(b_obj, k, nwords)).astype(gf.WORD_DTYPE[l])
-cws = np.stack([rr.encode_np(code, o) for o in objs])
+cws = np.stack([code.encode_np(o) for o in objs])
 missing = [1]
 ids = [i for i in range(n) if i not in missing]
 

@@ -38,12 +38,12 @@ from repro.core import gf, rapidraid as rr
 from repro.storage import chain, multi, repair as rep
 
 n, k, l, nc, nwords, b_obj, reps = {n}, {k}, {l}, {nc}, {nwords}, {b_obj}, {reps}
-code = rr.make_code(n, k, l=l, seed=0)
+code = rr.RapidRAIDCode.make(n, k, l=l, seed=0)
 rng = np.random.default_rng(0)
 data = rng.integers(0, 1 << l, size=(k, nwords)).astype(gf.WORD_DTYPE[l])
 objs = rng.integers(0, 1 << l,
                     size=(b_obj, k, nwords)).astype(gf.WORD_DTYPE[l])
-cw = rr.encode_np(code, data)
+cw = code.encode_np(data)
 ids = list(range(1, k + 2))
 missing = [0]
 alive = [i for i in range(n) if i not in missing]

@@ -9,6 +9,7 @@
   fig_hetero          §V trend  heterogeneous cluster: scheduler vs naive
   fig_throughput      (beyond paper) warm-path cold/warm latency + MB/s
   fig_lifecycle       (beyond paper) replication->coding migration + churn
+  fig_codes           (beyond paper) code families: LRC / MBR vs RapidRAID
   fig_checkpoint      (beyond paper) device-direct ckpt vs 3-replication
   roofline            EXPERIMENTS.md roofline table from dry-run artifacts
 
@@ -21,9 +22,10 @@ import time
 import traceback
 
 from benchmarks import (chain_tuning, fig3_dependencies, fig4_coding_times,
-                        fig5_congestion, fig_checkpoint, fig_hetero,
-                        fig_lifecycle, fig_repair_times, fig_throughput,
-                        roofline, table1_resilience, table2_cpu_cost)
+                        fig5_congestion, fig_checkpoint, fig_codes,
+                        fig_hetero, fig_lifecycle, fig_repair_times,
+                        fig_throughput, roofline, table1_resilience,
+                        table2_cpu_cost)
 
 MODULES = [
     ("table1_resilience", table1_resilience),
@@ -35,6 +37,7 @@ MODULES = [
     ("fig_hetero", fig_hetero),
     ("fig_throughput", fig_throughput),
     ("fig_lifecycle", fig_lifecycle),
+    ("fig_codes", fig_codes),
     ("fig_checkpoint", fig_checkpoint),
     ("chain_tuning", chain_tuning),
     ("roofline", roofline),

@@ -47,14 +47,14 @@ def bench_cec_table(l: int = 8) -> float:
 
 def bench_rr_table(l: int) -> float:
     """Paper-faithful RapidRAID: log/exp table arithmetic (Jerasure port)."""
-    code = rapidraid.make_code(N, K, l=l)
+    code = rapidraid.RapidRAIDCode.make(N, K, l=l)
     data = jnp.asarray(_data(l))
     G = jnp.asarray(code.G)
     return time_fn(lambda: gf.gf_matmul(G, data, l))
 
 
 def bench_rr_packed(l: int) -> float:
-    code = rapidraid.make_code(N, K, l=l)
+    code = rapidraid.RapidRAIDCode.make(N, K, l=l)
     packed = gf.pack_u32(jnp.asarray(_data(l)), l)
     import jax
     fn = jax.jit(lambda xp: gf.gf_matvec_packed(code.G, xp, l))
@@ -62,7 +62,7 @@ def bench_rr_packed(l: int) -> float:
 
 
 def bench_rr_bitlift(l: int = 8) -> float:
-    code = rapidraid.make_code(N, K, l=l)
+    code = rapidraid.RapidRAIDCode.make(N, K, l=l)
     data = jnp.asarray(_data(l))
     import jax
     fn = jax.jit(lambda d: kref.bitlift_encode_ref(code.G, d, l))

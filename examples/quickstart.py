@@ -12,20 +12,20 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
-from repro.core import classical, fault_tolerance, rapidraid
+from repro.core import classical, codes, fault_tolerance, rapidraid
 
 # --- 1. the code itself ----------------------------------------------------
-code = rapidraid.make_code(n=16, k=11, l=16, seed=0)
+code = codes.make("rapidraid", n=16, k=11, l=16, seed=0)
 print(f"(16,11) RapidRAID over GF(2^16): storage overhead "
       f"{code.storage_overhead:.2f}x (vs 2x replication)")
 
 rng = np.random.default_rng(0)
 obj = rng.integers(0, 1 << 16, size=(11, 4096)).astype(np.uint16)
-coded = rapidraid.encode_np(code, obj)                 # (16, 4096)
+coded = code.encode_np(obj)                 # (16, 4096)
 
 # lose any 5 of the 16 nodes -> still decodable from the surviving 11
 survivors = [0, 2, 3, 5, 6, 8, 9, 11, 12, 14, 15]
-decoded = rapidraid.decode_np(code, survivors, coded[survivors])
+decoded = code.decode_np(survivors, coded[survivors])
 assert np.array_equal(decoded, obj)
 print(f"decoded exactly from survivors {survivors}")
 
@@ -39,7 +39,7 @@ print(f"chain encode matches matrix encode ({ticks} pipeline ticks, "
 objs = rng.integers(0, 1 << 16, size=(4, 11, 4096)).astype(np.uint16)
 many, ticks_many = rapidraid.pipeline_encode_local_many(
     code, objs, num_chunks=8, stagger=1)
-assert all(np.array_equal(many[b], rapidraid.encode_np(code, objs[b]))
+assert all(np.array_equal(many[b], code.encode_np(objs[b]))
            for b in range(4))
 print(f"4 objects archived concurrently in {ticks_many} ticks "
       f"(sequential would take {4 * ticks})")

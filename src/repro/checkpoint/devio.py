@@ -235,6 +235,11 @@ def save_state(store, step: int, state, acfg: arc.ArchiveConfig,
     compiled once per state layout.
     """
     code = acfg.code()
+    if not code.positionwise:
+        raise ValueError(
+            f"device-direct checkpointing needs a positionwise code; "
+            f"{code.family!r} is sub-packetized — archive via the host "
+            f"path (manager.save) or pick family='rapidraid'/'lrc'")
     layout = state_layout(state)
     B = obj.block_bytes_for(layout.blob_len, acfg.k, lane_bytes=LANE_BYTES)
     nc = _chunk_count(B * 8 // acfg.l, acfg.l, num_chunks or acfg.num_chunks)
@@ -242,10 +247,11 @@ def save_state(store, step: int, state, acfg: arc.ArchiveConfig,
     if use_devices is None:
         use_devices = (order is not None if mesh is not None
                        else len(jax.devices()) >= acfg.n)
-    use_chain = use_devices and len(jax.devices()) >= acfg.n
+    use_chain = (use_devices and code.supports_chain_encode
+                 and len(jax.devices()) >= acfg.n)
     okey = tuple(order) if order is not None else None
     fn = jitcache.get(
-        ("ckpt_save", code, okey, use_chain, layout.key, B, nc),
+        ("ckpt_save", code.cache_key, okey, use_chain, layout.key, B, nc),
         lambda: _build_save(code, layout, order, nc, use_chain, B))
 
     leaves = jax.tree.flatten(state)[0]
@@ -285,12 +291,16 @@ def restore_state(store, step: int, like, acfg: arc.ArchiveConfig,
             f"the archived state layout {manifest['state_key']} "
             f"(different treedef, dtypes, or shapes)")
 
-    if manifest["tier"] != "archive" or manifest.get("hot_retained"):
+    coded = (arc._manifest_code(manifest)
+             if manifest["tier"] == "archive" else None)
+    if (manifest["tier"] != "archive" or manifest.get("hot_retained")
+            or not coded.positionwise):
+        # sub-packetized families restore through the host decode path
         blocks = arc.restore_blocks(store, step, acfg)
         blob = obj.join_blocks(blocks, blob_len or layout.blob_len)
         tree = obj.bytes_to_leaves(blob, like)
     else:
-        code = arc._manifest_code(manifest)
+        code = coded
         alive = arc._alive_coded(store, step, manifest)
         if len(alive) < manifest["k"]:
             raise FileNotFoundError(
@@ -314,10 +324,12 @@ def restore_state(store, step: int, like, acfg: arc.ArchiveConfig,
         if use_devices is None:
             use_devices = (order is not None if mesh is not None
                            else len(jax.devices()) >= len(helpers))
-        use_chain = use_devices and len(jax.devices()) >= len(helpers)
+        use_chain = (use_devices and code.positionwise
+                     and len(jax.devices()) >= len(helpers))
         okey = tuple(order) if order is not None else None
         fn = jitcache.get(
-            ("ckpt_restore", code, helpers, okey, use_chain, layout.key,
+            ("ckpt_restore", code.cache_key, helpers, okey, use_chain,
+             layout.key,
              manifest["block_bytes"], nc),
             lambda: _build_restore(code, helpers, layout, order, nc,
                                    use_chain))

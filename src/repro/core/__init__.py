@@ -4,4 +4,5 @@
 #   classical.py       Cauchy Reed-Solomon baseline (the paper's CEC)
 #   fault_tolerance.py k-subset rank analysis, static resilience (Fig 3, Table I)
 #   pipeline.py        generic chunked chain-pipeline scheduler (scan + ppermute)
-from repro.core import classical, fault_tolerance, gf, rapidraid  # noqa: F401
+from repro.core import (classical, codes, fault_tolerance, gf,  # noqa: F401
+                        rapidraid)

@@ -285,3 +285,113 @@ def monte_carlo_durability(n: int = 16, k: int = 11, replication: int = 3,
         # Laplace-smoothed so the ratio is finite and stable for the CI gate
         "durability_ratio": round((n_rep + 1) / (n_rr + 1), 3),
     }
+
+
+# ---------------------------------------------------------------------------
+# Monte Carlo code-family comparison: durability + repair traffic + storage
+# ---------------------------------------------------------------------------
+
+
+def _decodable_lookup(code, masks: np.ndarray,
+                      cache: dict[int, bool]) -> np.ndarray:
+    """Vectorized ``code.decodable`` over alive-set bitmasks.
+
+    Rank checks are memoized per bitmask (at most 2^n of them, and a churn
+    process visits only a tiny corner of that lattice), so the inner loop
+    of the Monte Carlo never recomputes a GF rank.
+    """
+    out = np.empty(masks.shape, dtype=bool)
+    for m in np.unique(masks):
+        if m not in cache:
+            cache[m] = code.decodable(
+                [i for i in range(code.n) if (int(m) >> i) & 1])
+        out[masks == m] = cache[m]
+    return out
+
+
+def monte_carlo_code_compare(families=("rapidraid", "lrc", "mbr"),
+                             n: int = 8, k: int = 4, l: int = 16,
+                             ticks: int = 400, trials: int = 400,
+                             fail_rate: float = 0.01,
+                             mean_down_ticks: int = 4,
+                             repair_ticks: int = 2, seed: int = 0,
+                             block_words: int = 1024) -> dict:
+    """Paired comparison of code FAMILIES under one seeded failure process.
+
+    Every family sees the identical per-trial node-failure sample (same
+    rng draws), so differences are pure code geometry:
+
+    * durability — an object is lost when the surviving node set is not
+      decodable *for that family* (code-aware: LRC is not MDS, MBR
+      tolerates any n-k losses);
+    * repair traffic — each completed shard repair is charged the family's
+      ``repair_transfer_words`` (LRC reads one local group, MBR pulls one
+      beta sub-block from each of d helpers, RapidRAID reads k full
+      shards), reported in units of the logical object (k*B words);
+    * storage overhead — ``code.storage_overhead`` (MBR pays n*alpha/M_sub
+      for its one-shard repairs).
+
+    Repairs complete ``repair_ticks`` after the failure — or at rejoin,
+    whichever is later — and only while the object is still decodable
+    (repair-on-rejoin, the lifecycle engine's policy). Loss latches.
+    Returns per-family rows plus cross-family ratios for the benchmark's
+    blocking model keys.
+    """
+    from repro.core import codes
+    built = {fam: codes.make(fam, n, k, l=l, seed=seed) for fam in families}
+    rng = np.random.default_rng(seed)
+    # ONE failure sample shared by every family
+    fail_coin = rng.random((ticks, trials, n))
+    durs = rng.integers(1, 2 * mean_down_ticks + 1, size=(ticks, trials, n))
+    out: dict[str, dict] = {}
+    for fam, code in built.items():
+        down_until = np.zeros((trials, n), dtype=np.int64)
+        missing = np.zeros((trials, n), dtype=bool)
+        restore = np.zeros((trials, n), dtype=np.int64)
+        lost = np.zeros(trials, dtype=bool)
+        repair_words = np.zeros(trials, dtype=np.float64)
+        cache: dict[int, bool] = {}
+        weights = 1 << np.arange(n, dtype=np.int64)
+        per_repair = float(code.repair_transfer_words(block_words))
+        for t in range(ticks):
+            up = down_until <= t
+            fails = up & (fail_coin[t] < fail_rate)
+            down_until = np.where(fails, t + durs[t], down_until)
+            missing |= fails
+            restore = np.where(fails, np.maximum(t + repair_ticks,
+                                                 down_until), restore)
+            alive_mask = ((~missing) * weights).sum(axis=1)
+            ok = (~lost) & _decodable_lookup(code, alive_mask, cache)
+            done = ok[:, None] & missing & (restore <= t)
+            repair_words += per_repair * done.sum(axis=1)
+            missing &= ~done
+            alive_mask = ((~missing) * weights).sum(axis=1)
+            lost |= ~_decodable_lookup(code, alive_mask, cache)
+        obj_words = k * block_words
+        out[fam] = {
+            "p_loss": round(float(lost.mean()), 4),
+            "lost": int(lost.sum()),
+            "storage_overhead": round(float(code.storage_overhead), 4),
+            "repair_words_per_event": per_repair,
+            "repair_traffic_objects": round(
+                float(repair_words.mean()) / obj_words, 3),
+            "max_tolerated_losses": int(code.max_tolerated_losses()),
+        }
+    result = {
+        "families": list(families), "n": n, "k": k, "l": l,
+        "ticks": ticks, "trials": trials, "fail_rate": fail_rate,
+        "repair_ticks": repair_ticks, "block_words": block_words,
+        "per_family": out,
+    }
+    if "rapidraid" in out:
+        rr = out["rapidraid"]
+        for fam in families:
+            if fam == "rapidraid":
+                continue
+            # Laplace-smoothed, stable for CI gates (cf. durability_ratio)
+            result[f"durability_ratio_{fam}"] = round(
+                (rr["lost"] + 1) / (out[fam]["lost"] + 1), 3)
+            result[f"repair_traffic_ratio_{fam}"] = round(
+                rr["repair_traffic_objects"]
+                / max(out[fam]["repair_traffic_objects"], 1e-9), 3)
+    return result

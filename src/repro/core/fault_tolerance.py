@@ -19,7 +19,7 @@ from typing import Iterable
 
 import numpy as np
 
-from repro.core import gf, rapidraid
+from repro.core import codes, gf, rapidraid
 
 
 def dependent_ksubsets(G: np.ndarray, k: int, l: int) -> list[tuple[int, ...]]:
@@ -37,7 +37,7 @@ def natural_dependencies(n: int, k: int, l: int = 16, trials: int = 3,
     """Structural dependent k-subsets of the (n,k) RapidRAID construction."""
     common: set[tuple[int, ...]] | None = None
     for t in range(trials):
-        code = rapidraid.make_code(n, k, l=l, seed=seed + 1000 * t + 1)
+        code = rapidraid.RapidRAIDCode.make(n, k, l=l, seed=seed + 1000 * t + 1)
         dep = set(dependent_ksubsets(code.G, k, l))
         common = dep if common is None else (common & dep)
         if not common:
@@ -60,7 +60,7 @@ def search_coefficients(n: int, k: int, l: int, target: int | None = None,
     best = None
     best_cnt = None
     for t in range(max_trials):
-        code = rapidraid.make_code(n, k, l=l, seed=seed + t)
+        code = rapidraid.RapidRAIDCode.make(n, k, l=l, seed=seed + t)
         cnt = len(dependent_ksubsets(code.G, k, l))
         if best_cnt is None or cnt < best_cnt:
             best, best_cnt = code, cnt
@@ -123,25 +123,21 @@ def repair_plan(code, missing: Iterable[int],
                 alive: Iterable[int]) -> tuple[list[int], np.ndarray]:
     """Helpers and coefficients reconstructing lost codeword rows.
 
-    Picks a decodable k-subset H of the surviving rows (greedy independent
-    rows of G) and returns ``(helpers, R)`` with ``R`` the
-    (len(missing), k) GF matrix satisfying ``R @ c[helpers] = c[missing]``:
-    R = G_missing @ G_H^{-1}. One GF inner product over k helper shards per
-    lost row — no full-object decode.
+    Dispatches to the code's own plan (``code.repair_plan``) when the code
+    speaks the ErasureCode API — locality-aware families (LRC) return
+    plans touching only the local group. The generic fallback picks a
+    decodable k-subset H of the surviving rows (greedy independent rows of
+    G) and returns ``(helpers, R)`` with ``R`` the (len(missing), k) GF
+    matrix satisfying ``R @ c[helpers] = c[missing]``:
+    R = G_missing @ G_H^{-1}. One GF inner product over the helper shards
+    per lost row — no full-object decode.
 
-    Raises ValueError (cleanly, before touching any data) when more than
-    n - k rows are lost, i.e. the survivors are not decodable.
+    Raises ValueError (cleanly, before touching any data) when the
+    survivors are not decodable.
     """
-    missing = list(missing)
-    alive = list(alive)
-    if set(missing) & set(alive):
-        raise ValueError(f"rows {set(missing) & set(alive)} both missing and alive")
-    G_alive = code.G[alive].astype(np.int64)
-    chosen = rapidraid.independent_rows(G_alive, code.k, code.l)  # ValueError if not
-    helpers = [alive[p] for p in chosen]
-    inv = gf.gf_inv_matrix_np(G_alive[chosen], code.l)            # (k, k)
-    R = gf.gf_matmul_np(code.G[missing], inv, code.l)             # (|missing|, k)
-    return helpers, R
+    if isinstance(code, codes.ErasureCode):
+        return code.repair_plan(missing, alive)
+    return codes.matrix_repair_plan(code, missing, alive)
 
 
 def repair_matrix(code, missing: Iterable[int],

@@ -23,11 +23,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gf
+from repro.core.codes import base as code_base
 
 
 def placement(n: int, k: int) -> tuple[tuple[int, ...], ...]:
@@ -81,12 +83,16 @@ def build_generator(n: int, k: int, psi, xi, l: int) -> np.ndarray:
 
 
 @dataclasses.dataclass(frozen=True)
-class RapidRAIDCode:
+class RapidRAIDCode(code_base.ErasureCode):
     n: int
     k: int
     l: int
     psi: tuple[int, ...]
     xi: tuple[int, ...]
+    seed: int = 0  # PRNG seed the psi/xi were drawn from (spec identity)
+
+    family = "rapidraid"
+    supports_chain_encode = True  # has a .chain pipeline schedule
 
     @functools.cached_property
     def place(self) -> tuple[tuple[int, ...], ...]:
@@ -100,19 +106,44 @@ class RapidRAIDCode:
     def chain(self) -> "ChainSchedule":
         return chain_schedule(self)
 
-    @property
-    def storage_overhead(self) -> float:
-        return self.n / self.k
+    @functools.cached_property
+    def cache_key(self):
+        # hand-built coefficient sets share a spec with the canonical
+        # seeded draw; only canonical codes may key caches by spec
+        if self == RapidRAIDCode.make(self.n, self.k, l=self.l,
+                                      seed=self.seed):
+            return self.spec
+        return self
+
+    @classmethod
+    def make(cls, n: int, k: int, l: int = 16, seed: int = 0) -> "RapidRAIDCode":
+        """Draw nonzero psi/xi coefficients from a seeded PRNG (paper §V-A).
+
+        The canonical constructor: ``spec`` round-trips through it, so
+        manifests/jitcache keys reconstruct exactly this code. Building
+        RapidRAIDCode directly with hand-picked coefficients is still
+        possible but such a code's ``spec`` does not identify it.
+        """
+        n_psi, n_xi = coeff_slots(n, k)
+        rng = np.random.default_rng(seed)
+        q = 1 << l
+        psi = tuple(int(v) for v in rng.integers(1, q, size=n_psi))
+        xi = tuple(int(v) for v in rng.integers(1, q, size=n_xi))
+        return cls(n=n, k=k, l=l, psi=psi, xi=xi, seed=seed)
+
+
+def _make_canonical(n: int, k: int, l: int = 16, seed: int = 0) -> RapidRAIDCode:
+    """Registry constructor for the ``rapidraid`` family."""
+    return RapidRAIDCode.make(n, k, l=l, seed=seed)
 
 
 def make_code(n: int, k: int, l: int = 16, seed: int = 0) -> RapidRAIDCode:
-    """Draw nonzero psi/xi coefficients from a seeded PRNG (paper §V-A)."""
-    n_psi, n_xi = coeff_slots(n, k)
-    rng = np.random.default_rng(seed)
-    q = 1 << l
-    psi = tuple(int(v) for v in rng.integers(1, q, size=n_psi))
-    xi = tuple(int(v) for v in rng.integers(1, q, size=n_xi))
-    return RapidRAIDCode(n=n, k=k, l=l, psi=psi, xi=xi)
+    """Deprecated: use ``repro.core.codes.make('rapidraid', n, k, ...)``."""
+    warnings.warn(
+        "rapidraid.make_code is deprecated; use "
+        "repro.core.codes.make('rapidraid', n, k, l=l, seed=seed)",
+        DeprecationWarning, stacklevel=2)
+    return RapidRAIDCode.make(n, k, l=l, seed=seed)
 
 
 # ---------------------------------------------------------------------------
@@ -126,7 +157,10 @@ def encode(code: RapidRAIDCode, data: jnp.ndarray) -> jnp.ndarray:
 
 
 def encode_np(code: RapidRAIDCode, data: np.ndarray) -> np.ndarray:
-    return gf.gf_matmul_np(code.G, data, code.l)
+    """Deprecated: use ``code.encode_np(data)`` (ErasureCode API)."""
+    warnings.warn("rapidraid.encode_np is deprecated; use code.encode_np",
+                  DeprecationWarning, stacklevel=2)
+    return code.encode_np(data)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -229,48 +263,23 @@ def pipeline_encode_local_many(code: RapidRAIDCode, objects: np.ndarray,
     return out, ticks
 
 
-def independent_rows(G_sub: np.ndarray, k: int, l: int) -> list[int]:
-    """Greedy positions of k linearly independent rows of ``G_sub``.
-
-    Raises ValueError when rank < k — the clean failure mode shared by
-    decode (``decode_matrix``) and repair planning
-    (``repro.core.fault_tolerance.repair_plan``).
-    """
-    G_sub = np.asarray(G_sub, dtype=np.int64)
-    if gf.gf_rank_np(G_sub, l) < k:
-        raise ValueError(
-            f"only rank {gf.gf_rank_np(G_sub, l)} of the required {k} "
-            f"available — not decodable")
-    chosen: list[int] = []
-    for pos in range(G_sub.shape[0]):
-        trial = chosen + [pos]
-        if gf.gf_rank_np(G_sub[trial], l) == len(trial):
-            chosen.append(pos)
-        if len(chosen) == k:
-            break
-    return chosen
+# canonical home moved to repro.core.codes.base; re-exported for callers
+independent_rows = code_base.independent_rows
 
 
-def decode_matrix(code: RapidRAIDCode, ids: list[int] | tuple[int, ...]) -> np.ndarray:
+def decode_matrix(code, ids: list[int] | tuple[int, ...]) -> np.ndarray:
     """(k x len(ids)) matrix D with D @ c[ids] = o. Raises if ids are not decodable."""
-    ids = list(ids)
-    G_sub = code.G[ids].astype(np.int64)
-    try:
-        chosen = independent_rows(G_sub, code.k, code.l)
-    except ValueError as e:
-        raise ValueError(f"shard set {ids} is not decodable: {e}") from None
-    inv = gf.gf_inv_matrix_np(G_sub[chosen], code.l)  # (k, k)
-    D = np.zeros((code.k, len(ids)), dtype=gf.WORD_DTYPE[code.l])
-    D[:, chosen] = inv
-    return D
+    return code.decode_matrix(ids)
 
 
-def decode(code: RapidRAIDCode, ids, shards: jnp.ndarray) -> jnp.ndarray:
+def decode(code, ids, shards: jnp.ndarray) -> jnp.ndarray:
     """Reconstruct the k original blocks from any decodable shard subset."""
-    D = decode_matrix(code, ids)
+    D = code.decode_matrix(ids)
     return gf.gf_matmul(D, shards, code.l)
 
 
-def decode_np(code: RapidRAIDCode, ids, shards: np.ndarray) -> np.ndarray:
-    D = decode_matrix(code, ids)
-    return gf.gf_matmul_np(D, shards, code.l)
+def decode_np(code, ids, shards: np.ndarray) -> np.ndarray:
+    """Deprecated: use ``code.decode_np(ids, shards)`` (ErasureCode API)."""
+    warnings.warn("rapidraid.decode_np is deprecated; use code.decode_np",
+                  DeprecationWarning, stacklevel=2)
+    return code.decode_np(ids, shards)

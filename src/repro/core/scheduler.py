@@ -32,6 +32,7 @@ import math
 
 import numpy as np
 
+from repro.core import codes
 from repro.core import topology as topo_lib
 from repro.core.topology import Topology
 
@@ -243,3 +244,41 @@ def plan_many(topo: Topology, n_objects: int, n: int, k: int,
         load[g] += plans[g].makespan
     return MultiPlan(plans=tuple(plans), assignment=tuple(assignment),
                      stagger=int(stagger))
+
+
+# ---------------------------------------------------------------------------
+# Temperature-aware code selection (which FAMILY, next to which placement)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CodePolicy:
+    """Pick the erasure-code family by object temperature.
+
+    Warm objects (recently written, still likely to be read or to lose a
+    shard while the cluster churns) archive into a code with cheap partial
+    repair — LRC reads only its local group to heal one shard. Cold objects
+    (aged past ``cold_age`` ticks before the migrator got to them) archive
+    into RapidRAID: the pipelined chain encode is the cheapest way to get
+    them coded, and their repairs are rare enough that full-k repair reads
+    are acceptable. The lifecycle engine consults this policy per object at
+    migration time; both families share the archive data plane, manifests,
+    and jit cache (keyed by ``CodeSpec``), so a mixed-temperature cluster
+    runs one engine.
+    """
+    hot_family: str = "lrc"
+    cold_family: str = "rapidraid"
+    cold_age: int = 8     # ticks since birth at which an object is cold
+
+    def __post_init__(self):
+        for fam in (self.hot_family, self.cold_family):
+            if fam not in codes.families():
+                raise ValueError(
+                    f"unknown code family {fam!r}; registered families: "
+                    f"{', '.join(codes.families())}")
+        if self.cold_age < 0:
+            raise ValueError(f"cold_age must be >= 0, got {self.cold_age}")
+
+    def family_for(self, age: int) -> str:
+        """Family for an object that is ``age`` ticks old at archive time."""
+        return self.cold_family if age >= self.cold_age else self.hot_family

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classical, fault_tolerance, gf, rapidraid
+from repro.core import classical, codes, fault_tolerance, gf, rapidraid
 from repro.storage import chain as chain_lib
 from repro.storage import multi as multi_lib
 from repro.storage import repair as repair_lib
@@ -61,9 +61,11 @@ class ArchiveConfig:
     seed: int = 0
     num_chunks: int = 8       # pipeline chunks per block
     baseline: str = "rapidraid"  # or "classical" (CEC; for benchmarks)
+    family: str = "rapidraid"    # registered code family (repro.core.codes)
 
-    def code(self) -> rapidraid.RapidRAIDCode:
-        return rapidraid.make_code(self.n, self.k, l=self.l, seed=self.seed)
+    def code(self) -> codes.ErasureCode:
+        return codes.make(self.family, self.n, self.k, l=self.l,
+                          seed=self.seed)
 
 
 def _words(blocks_u8: np.ndarray, l: int) -> np.ndarray:
@@ -93,7 +95,7 @@ def hot_save(store: NodeStore, step: int, blocks: np.ndarray,
             store.put(node, HOT.format(step=step, j=j), blobs[j])
     manifest = {
         "step": step, "tier": "hot", "n": acfg.n, "k": acfg.k, "l": acfg.l,
-        "seed": acfg.seed, "block_bytes": int(B),
+        "seed": acfg.seed, "family": acfg.family, "block_bytes": int(B),
         "digests": [digest(b) for b in blobs],
         "placement": [list(h) for h in place],
     }
@@ -203,13 +205,14 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
         sched = {**sched, "num_chunks": int(nc)}  # record what actually ran
     if use_devices is None:
         use_devices = len(jax.devices()) >= acfg.n
-    if use_devices:
+    if use_devices and code.supports_chain_encode:
         coded_w = np.asarray(chain_lib.pipelined_encode(
             code, data_w, num_chunks=nc,
             order=_device_order(perm, sched is not None)))
     else:
-        coded_w, _ = rapidraid.pipeline_encode_local(
-            code, np.asarray(data_w), num_chunks=nc)
+        # matrix-form host encode (bit-identical to the chain for
+        # RapidRAID; the only encode for non-chain families)
+        coded_w = code.encode_np(np.asarray(data_w))
     coded = _u8(coded_w)
     coded_blobs = [coded[i].tobytes() for i in range(acfg.n)]
 
@@ -223,7 +226,7 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
                 store.delete(node, HOT.format(step=step, j=j))
 
     manifest = {
-        **manifest, "tier": "archive",
+        **manifest, "tier": "archive", "family": acfg.family,
         "perm": [int(p) for p in perm],
         "coded_digests": [digest(b) for b in coded_blobs],
         "orig_digests": manifest["digests"],
@@ -254,16 +257,21 @@ def _archive_group(store: NodeStore, grp: list[int], acfg: ArchiveConfig,
         nc //= 2
     if sched is not None:
         sched = {**sched, "num_chunks": int(nc)}  # record what actually ran
-    if use_devices:
+    if use_devices and code.supports_chain_encode:
         coded_w = np.asarray(multi_lib.pipelined_encode_many(
             code, objs_w, num_chunks=nc, stagger=stagger,
             order=_device_order(perm, sched is not None)))
     else:
-        # one fused batched kernel launch over the whole group
-        Bp = B // gf.LANES[acfg.l]
-        coded_w = np.asarray(kernel_ops.encode_words(
-            code.G, jnp.asarray(objs_w), acfg.l,
-            block=kernel_ops.pick_block(Bp)))
+        # one fused batched kernel launch over the whole group; the
+        # message view is the identity for positionwise codes and the
+        # sub-packetized (M_sub, W) layout for regenerating codes, so
+        # EVERY family encodes through the same fused GF kernel
+        msgs = np.stack([np.asarray(code.to_message(o)) for o in objs_w])
+        Wp = msgs.shape[-1] // gf.LANES[acfg.l]
+        rows = np.asarray(kernel_ops.encode_words(
+            code.G, jnp.asarray(msgs), acfg.l,
+            block=kernel_ops.pick_block(Wp)))
+        coded_w = rows.reshape(len(grp), code.n, -1)
     out: dict[int, dict] = {}
     for b, step in enumerate(grp):
         coded = _u8(coded_w[b])
@@ -277,7 +285,7 @@ def _archive_group(store: NodeStore, grp: list[int], acfg: ArchiveConfig,
                 for j in held:
                     store.delete(node, HOT.format(step=step, j=j))
         manifest = {
-            **manifest, "tier": "archive",
+            **manifest, "tier": "archive", "family": acfg.family,
             "perm": [int(p) for p in perm],
             "coded_digests": [digest(b) for b in coded_blobs],
             "orig_digests": manifest["digests"],
@@ -463,21 +471,18 @@ def restore_blocks(store: NodeStore, step: int, acfg: ArchiveConfig,
             f"step {step}: only {len(alive)} of n={manifest['n']} coded "
             f"blocks alive, need k={manifest['k']}")
     k, l = manifest["k"], manifest["l"]
-    if manifest["tier"] == "archive_classical":
-        code = classical.make_code(manifest["n"], k, l=l)
-    else:
-        code = rapidraid.RapidRAIDCode(
-            n=manifest["n"], k=k, l=l,
-            **_coeffs_from_seed(manifest))
     ids = [pos for pos, _ in alive[: manifest["n"]]]
     shards = np.stack([np.frombuffer(raw, dtype=np.uint8)
                        for _, raw in alive])
     shards_w = _words(shards, l)
     # use the first decodable subset (greedy rank selection inside)
     if manifest["tier"] == "archive_classical":
+        code = classical.make_code(manifest["n"], k, l=l)
         data_w = classical.decode_np(code, ids, shards_w)
     else:
-        data_w = rapidraid.decode_np(code, ids, shards_w)
+        code = _manifest_code(manifest)
+        data_w = code.decode_np(
+            ids, shards_w, block_words=manifest["block_bytes"] // (l // 8))
     blocks = _u8(data_w)
     for j in range(k):
         # a real exception (asserts vanish under python -O): a decode that
@@ -489,10 +494,9 @@ def restore_blocks(store: NodeStore, step: int, acfg: ArchiveConfig,
     return blocks
 
 
-def _manifest_code(manifest: dict) -> rapidraid.RapidRAIDCode:
-    return rapidraid.RapidRAIDCode(n=manifest["n"], k=manifest["k"],
-                                   l=manifest["l"],
-                                   **_coeffs_from_seed(manifest))
+def _manifest_code(manifest: dict) -> codes.ErasureCode:
+    """Reconstruct the exact code a manifest describes (any family)."""
+    return codes.from_spec(codes.CodeSpec.from_manifest(manifest))
 
 
 def _place_repaired(store: NodeStore, step: int, manifest: dict,
@@ -542,7 +546,7 @@ def _repair_state(store: NodeStore, step: int,
         if not missing:
             return [], [], []
         alive = [p for p in range(manifest["n"]) if p not in dead]
-        helpers, _ = fault_tolerance.repair_plan(code, missing, alive)
+        helpers = code.repair_helpers(missing, alive)
         for h in helpers:
             if h not in raws:
                 raws[h] = store.get(perm[h], ARC.format(step=step, i=h))
@@ -604,7 +608,8 @@ def repair_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
         # steps only batch when they share the CODE as well as the loss
         # pattern — a seed/geometry mismatch must not borrow coefficients
         key = (manifest["block_bytes"], manifest["n"], manifest["k"],
-               manifest["l"], manifest["seed"], tuple(missing),
+               manifest["l"], manifest["seed"],
+               manifest.get("family", "rapidraid"), tuple(missing),
                tuple(helpers))
         layout.setdefault(key, []).append(step)
 
@@ -617,31 +622,38 @@ def repair_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
                 out[step] = []
             continue
         l = manifests[grp[0]]["l"]
-        k = manifests[grp[0]]["k"]
         code = _manifest_code(manifests[grp[0]])
         shards_w = np.stack([
             _words(np.stack([np.frombuffer(raw, dtype=np.uint8)
                              for raw in state[s][2]]), l)
-            for s in grp])                          # (B_obj, k, B) helpers
-        if use_devices is None:
-            use_devices_grp = len(jax.devices()) >= k
+            for s in grp])                      # (B_obj, |helpers|, B)
+        if not code.positionwise:
+            # sub-packetized repair (regenerating codes): per-object host
+            # combine of the beta-sub-block helper summands
+            repaired_w = np.stack([
+                code.repair_np(missing, helpers, shards_w[b])
+                for b in range(len(grp))])
         else:
-            use_devices_grp = use_devices
-        if use_devices_grp:
-            nc = acfg.num_chunks
-            while nc > 1 and shards_w.shape[-1] % (gf.LANES[l] * nc):
-                nc //= 2
-            repaired_w = np.asarray(repair_lib.pipelined_repair_many(
-                code, helpers, shards_w, missing, num_chunks=nc,
-                stagger=stagger))
-        else:
-            # helpers is already a greedy-decodable k-set, so the plan over
-            # it returns the same set and an R aligned with its order
-            _, R = fault_tolerance.repair_plan(code, missing, helpers)
-            packed = gf.pack_u32(jnp.asarray(shards_w), l)
-            fused = kernel_ops.encode_packed(
-                R, packed, l, block=kernel_ops.pick_block(packed.shape[-1]))
-            repaired_w = np.asarray(gf.unpack_u32(fused, l))
+            if use_devices is None:
+                use_devices_grp = len(jax.devices()) >= len(helpers)
+            else:
+                use_devices_grp = use_devices
+            if use_devices_grp:
+                nc = acfg.num_chunks
+                while nc > 1 and shards_w.shape[-1] % (gf.LANES[l] * nc):
+                    nc //= 2
+                repaired_w = np.asarray(repair_lib.pipelined_repair_many(
+                    code, helpers, shards_w, missing, num_chunks=nc,
+                    stagger=stagger))
+            else:
+                # helpers is already the plan's decodable helper set, so
+                # the plan over it returns the same set and an aligned R
+                _, R = fault_tolerance.repair_plan(code, missing, helpers)
+                packed = gf.pack_u32(jnp.asarray(shards_w), l)
+                fused = kernel_ops.encode_packed(
+                    R, packed, l,
+                    block=kernel_ops.pick_block(packed.shape[-1]))
+                repaired_w = np.asarray(gf.unpack_u32(fused, l))
         for b, step in enumerate(grp):
             _place_repaired(store, step, manifests[step], missing,
                             _u8(repaired_w[b]), replacement_nodes)
@@ -698,6 +710,13 @@ def read_range(store: NodeStore, step: int, acfg: ArchiveConfig,
         blocks = restore_blocks(store, step, acfg)
         return blocks.reshape(-1)[offset:end].tobytes()
 
+    code = _manifest_code(manifest)
+    if not code.positionwise:
+        # sub-packetized shards have no positionwise word ranges — serve
+        # the range from a full (digest-verified) restore
+        blocks = restore_blocks(store, step, acfg, heal=heal)
+        return blocks.reshape(-1)[offset:end].tobytes()
+
     perm = manifest["perm"]
     if heal and any(not store.has(perm[pos], ARC.format(step=step, i=pos))
                     for pos in range(manifest["n"])):
@@ -708,9 +727,8 @@ def read_range(store: NodeStore, step: int, acfg: ArchiveConfig,
         perm = manifest["perm"]
     alive_ids = [pos for pos in range(manifest["n"])
                  if store.has(perm[pos], ARC.format(step=step, i=pos))]
-    code = _manifest_code(manifest)
     try:
-        chosen = rapidraid.independent_rows(code.G[alive_ids], k, l)
+        chosen = codes.independent_rows(code.G[alive_ids], k, l)
     except ValueError as e:
         raise FileNotFoundError(
             f"step {step}: survivors not decodable ({e})") from None
@@ -719,7 +737,7 @@ def read_range(store: NodeStore, step: int, acfg: ArchiveConfig,
     # per touched block: read ONLY its word-aligned slice of each helper
     # shard and apply that block's row of the decode matrix
     # (degraded_read_np's math with D hoisted out of the loop)
-    D = rapidraid.decode_matrix(code, helpers)
+    D = code.decode_matrix(helpers)
     wb = l // 8
     dt = gf.WORD_DTYPE[l]
     out = bytearray()
@@ -765,7 +783,7 @@ def publish_device_archive(store: NodeStore, step: int, acfg: ArchiveConfig,
         store.put(pos, ARC.format(step=step, i=pos), coded_blobs[pos])
     manifest = {
         "step": step, "tier": "archive", "n": acfg.n, "k": acfg.k,
-        "l": acfg.l, "seed": acfg.seed,
+        "l": acfg.l, "seed": acfg.seed, "family": acfg.family,
         "block_bytes": int(blocks.shape[1]),
         "digests": orig_digests,
         # nominal hot placement (no replicas ever existed): keeps the
@@ -786,12 +804,6 @@ def publish_device_archive(store: NodeStore, step: int, acfg: ArchiveConfig,
 # ---------------------------------------------------------------------------
 # manifests (replicated on every node)
 # ---------------------------------------------------------------------------
-
-
-def _coeffs_from_seed(manifest: dict) -> dict:
-    code = rapidraid.make_code(manifest["n"], manifest["k"],
-                               l=manifest["l"], seed=manifest["seed"])
-    return {"psi": code.psi, "xi": code.xi}
 
 
 def _put_manifest(store: NodeStore, step: int, manifest: dict) -> None:
@@ -824,6 +836,11 @@ def _validate_manifest(manifest, step: int) -> dict:
         raise ValueError(f"step {step}: manifest ({tier}) is missing "
                          f"required keys {missing} — corrupt or "
                          f"partially written")
+    family = manifest.get("family", "rapidraid")
+    if family not in codes.families():
+        raise ValueError(
+            f"step {step}: manifest names unknown code family {family!r} "
+            f"— registered families: {', '.join(codes.families())}")
     return manifest
 
 

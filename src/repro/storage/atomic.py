@@ -24,7 +24,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import compat, gf, jitcache
 from repro.core.classical import ClassicalRSCode
-from repro.core.rapidraid import RapidRAIDCode
+from repro.core.codes import ErasureCode
 
 AXIS = "chain"
 
@@ -39,8 +39,8 @@ def encode_local(code, data_packed: jax.Array) -> jax.Array:
     """
     if isinstance(code, ClassicalRSCode):
         M = code.parity_matrix
-    elif isinstance(code, RapidRAIDCode):
-        M = code.G
+    elif isinstance(code, ErasureCode):
+        M = code.G  # any family's flattened generator (rows x sub_k)
     else:
         raise TypeError(type(code))
     return gf.gf_matvec_packed(M, data_packed, code.l)

@@ -31,7 +31,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import compat, gf, jitcache, pipeline
-from repro.core.rapidraid import RapidRAIDCode
+from repro.core.codes import ErasureCode
 
 AXIS = "chain"
 
@@ -49,7 +49,7 @@ def column_bitplanes(M: np.ndarray, l: int) -> np.ndarray:
 
 
 @functools.lru_cache(maxsize=None)
-def bitplane_coeff_planes(code: RapidRAIDCode) -> tuple[np.ndarray, np.ndarray]:
+def bitplane_coeff_planes(code: ErasureCode) -> tuple[np.ndarray, np.ndarray]:
     """(bp_psi, bp_xi), each (n, max_b, l) uint32 with bp[i,s,j] = coef*alpha^j.
 
     Cached per code: the planes are a pure function of the (hashable) code
@@ -65,7 +65,7 @@ def bitplane_coeff_planes(code: RapidRAIDCode) -> tuple[np.ndarray, np.ndarray]:
 
 
 @functools.lru_cache(maxsize=None)
-def placement_indices(code: RapidRAIDCode) -> tuple[np.ndarray, np.ndarray]:
+def placement_indices(code: ErasureCode) -> tuple[np.ndarray, np.ndarray]:
     """Static gather spec for replica placement: (idx, valid), both (n, max_b).
 
     ``local[i, s] = data[idx[i, s]] if valid[i, s] else 0`` — the whole
@@ -79,7 +79,7 @@ def placement_indices(code: RapidRAIDCode) -> tuple[np.ndarray, np.ndarray]:
     return idx, valid
 
 
-def build_local_blocks(code: RapidRAIDCode, data: np.ndarray) -> np.ndarray:
+def build_local_blocks(code: ErasureCode, data: np.ndarray) -> np.ndarray:
     """Replica placement: (n, max_b, B) words; padded slots are zero.
 
     Host reference of the in-program placement gather (the jitted encode
@@ -165,7 +165,7 @@ def _check_chunking(B: int, l: int, num_chunks: int, what: str) -> None:
             f"of whole uint32 lanes ({lanes} GF(2^{l}) words each)")
 
 
-def _encode_core(code: RapidRAIDCode, mesh: Mesh, num_chunks: int):
+def _encode_core(code: ErasureCode, mesh: Mesh, num_chunks: int):
     """Traceable encode: words (k, B) -> codeword words (n, B), sharded.
 
     Returns a plain traceable function (placement gather + in-program
@@ -194,12 +194,12 @@ def _encode_core(code: RapidRAIDCode, mesh: Mesh, num_chunks: int):
     return encode
 
 
-def _build_encode(code: RapidRAIDCode, mesh: Mesh, num_chunks: int):
+def _build_encode(code: ErasureCode, mesh: Mesh, num_chunks: int):
     """One compiled program: words (k, B) -> codeword words (n, B), sharded."""
     return jax.jit(_encode_core(code, mesh, num_chunks))
 
 
-def pipelined_encode(code: RapidRAIDCode, data, num_chunks: int = 8,
+def pipelined_encode(code: ErasureCode, data, num_chunks: int = 8,
                      mesh: Mesh | None = None, order=None) -> jax.Array:
     """Archive object ``data`` (k, B) words -> codeword blocks (n, B) words.
 
@@ -212,6 +212,10 @@ def pipelined_encode(code: RapidRAIDCode, data, num_chunks: int = 8,
     placement, packing, pipeline, and unpacking all inside it, so repeat
     calls neither retrace nor touch the host beyond the input transfer.
     """
+    if not code.supports_chain_encode:
+        raise ValueError(
+            f"pipelined_encode: {code.family} has no chain schedule — "
+            f"use code.encode_np or the fused-kernel archive path")
     data = np.asarray(data)
     if data.ndim != 2 or data.shape[0] != code.k:
         raise ValueError(
@@ -221,7 +225,7 @@ def pipelined_encode(code: RapidRAIDCode, data, num_chunks: int = 8,
         raise ValueError("pass either mesh or order, not both")
     mesh = mesh or make_chain_mesh(code.n, order)
     fn = jitcache.get(
-        ("encode", code, mesh, data.shape[1], num_chunks),
+        ("encode", code.cache_key, mesh, data.shape[1], num_chunks),
         lambda: _build_encode(code, mesh, num_chunks))
     return fn(data)
 
@@ -251,7 +255,7 @@ def _decode_shard(local, bp_node, *, k: int, l: int, num_chunks: int):
     return out[None]
 
 
-def _decode_core(code: RapidRAIDCode, ids: tuple[int, ...], mesh: Mesh,
+def _decode_core(code: ErasureCode, ids: tuple[int, ...], mesh: Mesh,
                  num_chunks: int):
     """Traceable decode: survivor words (n_alive, B) -> object (k, B).
 
@@ -261,9 +265,8 @@ def _decode_core(code: RapidRAIDCode, ids: tuple[int, ...], mesh: Mesh,
     bitcasting — without leaving the program. ``ids`` must be a decodable
     survivor set (``decode_matrix`` raises otherwise, at build time).
     """
-    from repro.core import rapidraid as rr_lib
     l = code.l
-    D = rr_lib.decode_matrix(code, list(ids))       # (k, n_alive), host, once
+    D = code.decode_matrix(list(ids))               # (k, n_alive), host, once
     bp = jnp.asarray(column_bitplanes(D, l))        # (n_alive, k, l)
     body = functools.partial(_decode_shard, k=code.k, l=l,
                              num_chunks=num_chunks)
@@ -277,13 +280,13 @@ def _decode_core(code: RapidRAIDCode, ids: tuple[int, ...], mesh: Mesh,
     return decode
 
 
-def _build_decode(code: RapidRAIDCode, ids: tuple[int, ...], mesh: Mesh,
+def _build_decode(code: ErasureCode, ids: tuple[int, ...], mesh: Mesh,
                   num_chunks: int):
     """One compiled program: survivor words (n_alive, B) -> object (k, B)."""
     return jax.jit(_decode_core(code, ids, mesh, num_chunks))
 
 
-def pipelined_decode(code: RapidRAIDCode, ids, shards, num_chunks: int = 8,
+def pipelined_decode(code: ErasureCode, ids, shards, num_chunks: int = 8,
                      mesh: Mesh | None = None) -> jax.Array:
     """Pipelined RapidRAID decode (paper §III: "pipelined decoding
     operations, faster than classical decoding ... not reported here").
@@ -298,6 +301,10 @@ def pipelined_decode(code: RapidRAIDCode, ids, shards, num_chunks: int = 8,
     prefix resident — the dual of the encode chain. The decode matrix and
     the compiled program are cached per (code, ids, mesh, shapes).
     """
+    if not code.positionwise:
+        raise ValueError(
+            f"pipelined_decode: {code.family} shards are sub-packetized — "
+            f"use code.decode_np")
     ids = tuple(int(i) for i in ids)
     shards = np.asarray(shards)
     if shards.ndim != 2 or shards.shape[0] != len(ids):
@@ -307,7 +314,7 @@ def pipelined_decode(code: RapidRAIDCode, ids, shards, num_chunks: int = 8,
     _check_chunking(shards.shape[1], code.l, num_chunks, "pipelined_decode")
     mesh = mesh or make_chain_mesh(len(ids))
     fn = jitcache.get(
-        ("decode", code, ids, mesh, shards.shape[1], num_chunks),
+        ("decode", code.cache_key, ids, mesh, shards.shape[1], num_chunks),
         lambda: _build_decode(code, ids, mesh, num_chunks))
     return fn(shards)
 

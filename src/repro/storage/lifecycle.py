@@ -60,6 +60,9 @@ class LifecycleConfig:
     batch_max: int = 4            # archive_many batch cap per tick
     seed: int = 0                 # payload generator seed
     use_devices: bool = False     # device chains when the mesh has n devices
+    # temperature-aware family selection (core.scheduler.CodePolicy);
+    # None = every object archives with ``acfg.family``
+    code_policy: object = None
 
 
 class ClusterLifecycle:
@@ -188,9 +191,17 @@ class ClusterLifecycle:
                 ready.append(step)
         if not ready:
             return []
-        arc.archive_many(self.store, ready, self.acfg,
-                         use_devices=self.lcfg.use_devices,
-                         topology=self.topology, reclaim_hot=False)
+        policy = self.lcfg.code_policy
+        fam_of = {
+            step: (policy.family_for(t - self.objects[step]["born"])
+                   if policy is not None else self.acfg.family)
+            for step in ready}
+        for fam in sorted(set(fam_of.values())):
+            grp = [s for s in ready if fam_of[s] == fam]
+            arc.archive_many(self.store, grp,
+                             dataclasses.replace(self.acfg, family=fam),
+                             use_devices=self.lcfg.use_devices,
+                             topology=self.topology, reclaim_hot=False)
         for step in ready:
             self.objects[step]["state"] = "archived"
         return ready
@@ -213,7 +224,11 @@ class ClusterLifecycle:
             missing = [pos for pos in range(manifest["n"])
                        if not self.store.has(perm[pos],
                                              ARC.format(step=step, i=pos))]
-            if len(missing) > manifest["n"] - manifest["k"]:
+            alive = [pos for pos in range(manifest["n"])
+                     if pos not in missing]
+            # decodability is the CODE's call (LRC is not MDS: a loss
+            # pattern within n-k can still be fatal; MBR tolerates more)
+            if missing and not arc._manifest_code(manifest).decodable(alive):
                 if manifest.get("hot_retained"):
                     continue            # replicas still back the object
                 st["state"] = "lost"
@@ -235,12 +250,14 @@ class ClusterLifecycle:
             if manifest is None:
                 continue
             perm = manifest["perm"]
-            miss = sum(1 for pos in range(manifest["n"])
-                       if not self.store.has(perm[pos],
-                                             ARC.format(step=step, i=pos)))
-            if miss:
+            alive = [pos for pos in range(manifest["n"])
+                     if self.store.has(perm[pos],
+                                       ARC.format(step=step, i=pos))]
+            if len(alive) < manifest["n"]:
                 backlog += 1
-            if manifest["n"] - miss <= manifest["k"]:
+            code = arc._manifest_code(manifest)
+            if any(not code.decodable([p for p in alive if p != q])
+                   for q in alive):
                 at_risk += 1
         return repaired, backlog, at_risk
 
@@ -293,8 +310,11 @@ class ClusterLifecycle:
                     if j in held and self.store.has(i, rel))
             if st["state"] in ("archived", "sealed"):
                 perm = manifest["perm"]
-                coded_bytes += B * sum(
-                    1 for pos in range(manifest["n"])
+                # actual on-disk sizes: regenerating codes store alpha
+                # sub-blocks per node, so a shard is NOT one block
+                coded_bytes += sum(
+                    self.store.size(perm[pos], ARC.format(step=step, i=pos))
+                    for pos in range(manifest["n"])
                     if self.store.has(perm[pos],
                                       ARC.format(step=step, i=pos)))
         return {"bytes_hot": hot_bytes, "bytes_coded": coded_bytes,

@@ -37,7 +37,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import compat, gf, jitcache, pipeline
-from repro.core.rapidraid import RapidRAIDCode
+from repro.core.codes import ErasureCode
 from repro.storage import chain as chain_lib
 
 AXIS = chain_lib.AXIS
@@ -75,7 +75,7 @@ def _encode_many_shard(local, bp_psi, bp_xi, *, l: int, num_chunks: int,
     return out[None]
 
 
-def _encode_many_core(code: RapidRAIDCode, mesh, num_chunks: int,
+def _encode_many_core(code: ErasureCode, mesh, num_chunks: int,
                       stagger: int):
     """Traceable batched encode (see ``chain._encode_core`` for the pattern):
     (B_obj, k, B) words -> (B_obj, n, B) words, embeddable in larger jitted
@@ -101,13 +101,13 @@ def _encode_many_core(code: RapidRAIDCode, mesh, num_chunks: int,
     return encode
 
 
-def _build_encode_many(code: RapidRAIDCode, mesh, num_chunks: int,
+def _build_encode_many(code: ErasureCode, mesh, num_chunks: int,
                        stagger: int):
     """One compiled program: (B_obj, k, B) words -> (B_obj, n, B) words."""
     return jax.jit(_encode_many_core(code, mesh, num_chunks, stagger))
 
 
-def pipelined_encode_many(code: RapidRAIDCode, objects, num_chunks: int = 8,
+def pipelined_encode_many(code: ErasureCode, objects, num_chunks: int = 8,
                           stagger: int = 1, mesh=None,
                           order=None) -> jax.Array:
     """Archive B_obj objects concurrently: (B_obj, k, B) -> (B_obj, n, B).
@@ -117,6 +117,10 @@ def pipelined_encode_many(code: RapidRAIDCode, objects, num_chunks: int = 8,
     ``order`` (scheduler placement) assigns device ``order[p]`` to chain
     position p for every chain in the batch.
     """
+    if not code.supports_chain_encode:
+        raise ValueError(
+            f"pipelined_encode_many: {code.family} has no chain schedule — "
+            f"use code.encode_np or the fused-kernel archive path")
     objects = np.asarray(objects)
     if objects.ndim != 3 or objects.shape[1] != code.k:
         raise ValueError(
@@ -128,7 +132,7 @@ def pipelined_encode_many(code: RapidRAIDCode, objects, num_chunks: int = 8,
         raise ValueError("pass either mesh or order, not both")
     mesh = mesh or chain_lib.make_chain_mesh(code.n, order)
     fn = jitcache.get(
-        ("encode_many", code, mesh, B_obj, B, num_chunks, stagger),
+        ("encode_many", code.cache_key, mesh, B_obj, B, num_chunks, stagger),
         lambda: _build_encode_many(code, mesh, num_chunks, stagger))
     return fn(objects)
 
@@ -158,14 +162,13 @@ def _decode_many_shard(local, bp_node, *, k: int, l: int, num_chunks: int,
     return out[None]
 
 
-def _decode_many_core(code: RapidRAIDCode, ids: tuple[int, ...], mesh,
+def _decode_many_core(code: ErasureCode, ids: tuple[int, ...], mesh,
                       num_chunks: int, stagger: int):
     """Traceable batched decode (see ``chain._decode_core`` for the pattern):
     (B_obj, n_alive, B) -> (B_obj, k, B), embeddable in larger jitted
     programs."""
-    from repro.core import rapidraid as rr_lib
     l = code.l
-    D = rr_lib.decode_matrix(code, list(ids))       # (k, n_alive), host, once
+    D = code.decode_matrix(list(ids))               # (k, n_alive), host, once
     bp = jnp.asarray(chain_lib.column_bitplanes(D, l))
     body = functools.partial(_decode_many_shard, k=code.k, l=l,
                              num_chunks=num_chunks, stagger=stagger)
@@ -180,13 +183,13 @@ def _decode_many_core(code: RapidRAIDCode, ids: tuple[int, ...], mesh,
     return decode
 
 
-def _build_decode_many(code: RapidRAIDCode, ids: tuple[int, ...], mesh,
+def _build_decode_many(code: ErasureCode, ids: tuple[int, ...], mesh,
                        num_chunks: int, stagger: int):
     """One compiled program: (B_obj, n_alive, B) -> (B_obj, k, B)."""
     return jax.jit(_decode_many_core(code, ids, mesh, num_chunks, stagger))
 
 
-def pipelined_decode_many(code: RapidRAIDCode, ids, shards,
+def pipelined_decode_many(code: ErasureCode, ids, shards,
                           num_chunks: int = 8, stagger: int = 1,
                           mesh=None) -> jax.Array:
     """Staggered multi-object pipelined decode (dual of encode_many).
@@ -196,6 +199,10 @@ def pipelined_decode_many(code: RapidRAIDCode, ids, shards,
     same rows). shards (B_obj, n_alive, B) -> decoded (B_obj, k, B); the
     last chain node finishes holding every object's decoded blocks.
     """
+    if not code.positionwise:
+        raise ValueError(
+            f"pipelined_decode_many: {code.family} shards are "
+            f"sub-packetized — use code.decode_np")
     ids = tuple(int(i) for i in ids)
     shards = np.asarray(shards)
     if shards.ndim != 3 or shards.shape[1] != len(ids):
@@ -206,6 +213,6 @@ def pipelined_decode_many(code: RapidRAIDCode, ids, shards,
     chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_decode_many")
     mesh = mesh or chain_lib.make_chain_mesh(len(ids))
     fn = jitcache.get(
-        ("decode_many", code, ids, mesh, B_obj, B, num_chunks, stagger),
+        ("decode_many", code.cache_key, ids, mesh, B_obj, B, num_chunks, stagger),
         lambda: _build_decode_many(code, ids, mesh, num_chunks, stagger))
     return fn(shards)

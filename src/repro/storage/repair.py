@@ -47,19 +47,21 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import compat, fault_tolerance, gf, jitcache, pipeline, rapidraid
-from repro.core.rapidraid import RapidRAIDCode
+from repro.core import compat, fault_tolerance, gf, jitcache, pipeline
+from repro.core.codes import ErasureCode
 from repro.storage import chain as chain_lib
 
 AXIS = chain_lib.AXIS
 
 
 @functools.lru_cache(maxsize=None)
-def _repair_plan_cached(code: RapidRAIDCode, missing: tuple[int, ...],
+def _repair_plan_cached(code: ErasureCode, missing: tuple[int, ...],
                         ids: tuple[int, ...]):
-    """Memoized ``fault_tolerance.repair_plan``: the plan is a pure function
-    of (code, missing, survivors) and costs a host Gaussian elimination —
-    warm repairs of the same loss pattern reuse it. R is read-only."""
+    """Memoized ``code.repair_plan``: the plan is a pure function of
+    (code, missing, survivors) and costs a host Gaussian elimination —
+    warm repairs of the same loss pattern reuse it. Locality-aware
+    families (LRC) return short helper lists here, so the pipelined chain
+    below only ever touches the local group. R is read-only."""
     helpers, R = fault_tolerance.repair_plan(code, list(missing), list(ids))
     R.setflags(write=False)
     return tuple(helpers), R
@@ -70,15 +72,18 @@ def _repair_plan_cached(code: RapidRAIDCode, missing: tuple[int, ...],
 # ---------------------------------------------------------------------------
 
 
-def repair_np(code: RapidRAIDCode, missing, ids, shards) -> np.ndarray:
+def repair_np(code: ErasureCode, missing, ids, shards) -> np.ndarray:
     """Reconstruct lost codeword rows on the host (numpy reference).
 
     ids: surviving codeword rows; shards (len(ids), B) their blocks.
     Returns (len(missing), B) — bit-exact rows of ``encode_np``'s output.
-    Raises ValueError when more than n-k rows are missing.
+    Raises ValueError when the survivors are not decodable. Sub-packetized
+    families (regenerating codes) dispatch to their own ``repair_np``.
     """
     ids = list(ids)
     shards = np.asarray(shards)
+    if not code.positionwise:
+        return code.repair_np(list(missing), ids, shards)
     helpers, R = _repair_plan_cached(code, tuple(missing), tuple(ids))
     rows = [ids.index(h) for h in helpers]
     return gf.gf_matmul_np(R, shards[rows], code.l)
@@ -137,7 +142,7 @@ def _check_repair_shards(shards: np.ndarray, ids, ndim: int,
             f"{'(B_obj, ' if ndim == 3 else '('}len(ids)={len(ids)}, B)")
 
 
-def _build_repair(code: RapidRAIDCode, missing: tuple[int, ...],
+def _build_repair(code: ErasureCode, missing: tuple[int, ...],
                   helpers: tuple[int, ...], R: np.ndarray, mesh,
                   num_chunks: int):
     """One compiled program: helper words (h, B) -> repaired (|missing|, B)."""
@@ -161,7 +166,7 @@ def _build_repair(code: RapidRAIDCode, missing: tuple[int, ...],
     return program
 
 
-def pipelined_repair(code: RapidRAIDCode, ids, shards, missing,
+def pipelined_repair(code: ErasureCode, ids, shards, missing,
                      num_chunks: int = 8, mesh=None) -> jax.Array:
     """Repair ≤ n-k lost shards by streaming k survivors through a chain.
 
@@ -175,18 +180,22 @@ def pipelined_repair(code: RapidRAIDCode, ids, shards, missing,
     ids = list(ids)
     shards = np.asarray(shards)
     _check_repair_shards(shards, ids, 2, "pipelined_repair")
+    if not code.positionwise:
+        raise ValueError(
+            f"pipelined_repair: {code.family} shards are sub-packetized — "
+            f"use code.repair_np")
     missing = tuple(int(m) for m in missing)
     helpers, R = _repair_plan_cached(code, missing, tuple(ids))
     B = shards.shape[1]
     chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_repair")
     mesh = mesh or chain_lib.make_chain_mesh(len(helpers))
     fn = jitcache.get(
-        ("repair", code, missing, helpers, mesh, B, num_chunks),
+        ("repair", code.cache_key, missing, helpers, mesh, B, num_chunks),
         lambda: _build_repair(code, missing, helpers, R, mesh, num_chunks))
     return fn(shards[[ids.index(i) for i in helpers]])
 
 
-def _build_repair_many(code: RapidRAIDCode, missing: tuple[int, ...],
+def _build_repair_many(code: ErasureCode, missing: tuple[int, ...],
                        helpers: tuple[int, ...], R: np.ndarray, mesh,
                        num_chunks: int, B_obj: int, stagger: int):
     """One compiled program: (B_obj, h, B) helpers -> (B_obj, |missing|, B)."""
@@ -211,7 +220,7 @@ def _build_repair_many(code: RapidRAIDCode, missing: tuple[int, ...],
     return program
 
 
-def pipelined_repair_many(code: RapidRAIDCode, ids, shards, missing,
+def pipelined_repair_many(code: ErasureCode, ids, shards, missing,
                           num_chunks: int = 8, stagger: int = 1,
                           mesh=None) -> jax.Array:
     """B concurrent repairs through ONE staggered shard_map launch.
@@ -224,13 +233,17 @@ def pipelined_repair_many(code: RapidRAIDCode, ids, shards, missing,
     ids = list(ids)
     shards = np.asarray(shards)
     _check_repair_shards(shards, ids, 3, "pipelined_repair_many")
+    if not code.positionwise:
+        raise ValueError(
+            f"pipelined_repair_many: {code.family} shards are "
+            f"sub-packetized — use code.repair_np")
     missing = tuple(int(m) for m in missing)
     helpers, R = _repair_plan_cached(code, missing, tuple(ids))
     B_obj, _, B = shards.shape
     chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_repair_many")
     mesh = mesh or chain_lib.make_chain_mesh(len(helpers))
     fn = jitcache.get(
-        ("repair_many", code, missing, helpers, mesh, B_obj, B, num_chunks,
+        ("repair_many", code.cache_key, missing, helpers, mesh, B_obj, B, num_chunks,
          stagger),
         lambda: _build_repair_many(code, missing, helpers, R, mesh,
                                    num_chunks, B_obj, stagger))
@@ -242,7 +255,7 @@ def pipelined_repair_many(code: RapidRAIDCode, ids, shards, missing,
 # ---------------------------------------------------------------------------
 
 
-def _build_star_repair(code: RapidRAIDCode, R: np.ndarray, mesh):
+def _build_star_repair(code: ErasureCode, R: np.ndarray, mesh):
     """One compiled program for the star baseline (all-gather + local GF)."""
     l = code.l
     R = np.asarray(R)
@@ -261,7 +274,7 @@ def _build_star_repair(code: RapidRAIDCode, R: np.ndarray, mesh):
     return program
 
 
-def star_repair(code: RapidRAIDCode, ids, shards, missing,
+def star_repair(code: ErasureCode, ids, shards, missing,
                 mesh=None) -> jax.Array:
     """Star repair: the replacement node gathers k whole helper shards and
     reconstructs locally — the degraded-read analogue of classical encode
@@ -276,7 +289,7 @@ def star_repair(code: RapidRAIDCode, ids, shards, missing,
     helpers, R = _repair_plan_cached(code, missing, tuple(ids))
     mesh = mesh or chain_lib.make_chain_mesh(len(helpers))
     fn = jitcache.get(
-        ("star_repair", code, missing, helpers, mesh, shards.shape[1]),
+        ("star_repair", code.cache_key, missing, helpers, mesh, shards.shape[1]),
         lambda: _build_star_repair(code, R, mesh))
     return fn(shards[[ids.index(i) for i in helpers]])
 
@@ -286,7 +299,7 @@ def star_repair(code: RapidRAIDCode, ids, shards, missing,
 # ---------------------------------------------------------------------------
 
 
-def degraded_read_np(code: RapidRAIDCode, ids, shard_slices,
+def degraded_read_np(code: ErasureCode, ids, shard_slices,
                      block_ids) -> np.ndarray:
     """Serve object blocks from coded shards WITHOUT full-object decode.
 
@@ -296,18 +309,18 @@ def degraded_read_np(code: RapidRAIDCode, ids, shard_slices,
     (len(block_ids), W) — o_j[w0:w1] = xor_h D[j, h] * c_h[w0:w1], since
     decode is position-wise over words.
     """
-    D = rapidraid.decode_matrix(code, list(ids))
+    D = code.decode_matrix(list(ids))
     return gf.gf_matmul_np(D[list(block_ids)], np.asarray(shard_slices),
                            code.l)
 
 
-def degraded_read(code: RapidRAIDCode, ids, shard_slices, block_ids,
+def degraded_read(code: ErasureCode, ids, shard_slices, block_ids,
                   interpret: bool | None = None) -> np.ndarray:
     """Kernel path of ``degraded_read_np``: one fused pallas launch applies
     the requested rows of the decode matrix to the packed slices."""
     from repro.kernels.gf_encode import ops as kernel_ops
     shard_slices = np.asarray(shard_slices)
-    D = rapidraid.decode_matrix(code, list(ids))[list(block_ids)]
+    D = code.decode_matrix(list(ids))[list(block_ids)]
     W = shard_slices.shape[1]
     lanes = gf.LANES[code.l]
     chain_lib._check_chunking(W, code.l, 1, "degraded_read")

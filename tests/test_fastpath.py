@@ -26,12 +26,12 @@ from repro.core import gf, jitcache, rapidraid as rr
 from repro.storage import chain, multi, repair as rep
 
 n, k, l, nc = {n}, {k}, {l}, {chunks}
-code = rr.make_code(n, k, l=l, seed=13)
+code = rr.RapidRAIDCode.make(n, k, l=l, seed=13)
 rng = np.random.default_rng(0)
 B = gf.LANES[l] * nc * 6
 data = rng.integers(0, 1 << l, size=(k, B)).astype(gf.WORD_DTYPE[l])
 objs = rng.integers(0, 1 << l, size=(3, k, B)).astype(gf.WORD_DTYPE[l])
-cw = rr.encode_np(code, data)
+cw = code.encode_np(data)
 ids = list(range(1, k + 2))
 missing = [0]
 alive = [i for i in range(n) if i not in missing]
@@ -74,20 +74,20 @@ from repro.core import gf, rapidraid as rr
 from repro.storage import chain, multi, repair as rep
 
 n, k, l = {n}, {k}, {l}
-code = rr.make_code(n, k, l=l, seed=7)
+code = rr.RapidRAIDCode.make(n, k, l=l, seed=7)
 rng = np.random.default_rng(1)
 # RAGGED chunks: S = 7 uint32 lanes per chunk — far from the 512-lane tile,
 # so the per-tick kernels run the whole-chunk-tile path
 nc = 4
 B = gf.LANES[l] * nc * 7
 data = rng.integers(0, 1 << l, size=(k, B)).astype(gf.WORD_DTYPE[l])
-want = rr.encode_np(code, data)
+want = code.encode_np(data)
 got = np.asarray(chain.pipelined_encode(code, data, num_chunks=nc))
 np.testing.assert_array_equal(got, want)
 
 ids = list(range(1, k + 2))
 dec = np.asarray(chain.pipelined_decode(code, ids, want[ids], num_chunks=nc))
-np.testing.assert_array_equal(dec, rr.decode_np(code, ids, want[ids]))
+np.testing.assert_array_equal(dec, code.decode_np(ids, want[ids]))
 np.testing.assert_array_equal(dec, data)
 
 # every loss count 1..n-k, against the numpy repair reference
@@ -102,7 +102,7 @@ for n_lost in range(1, n - k + 1):
 
 # staggered multi-object variants on the same ragged geometry
 objs = rng.integers(0, 1 << l, size=(3, k, B)).astype(gf.WORD_DTYPE[l])
-cws = np.stack([rr.encode_np(code, o) for o in objs])
+cws = np.stack([code.encode_np(o) for o in objs])
 got_m = np.asarray(multi.pipelined_encode_many(code, objs, num_chunks=nc))
 np.testing.assert_array_equal(got_m, cws)
 dec_m = np.asarray(multi.pipelined_decode_many(code, ids, cws[:, ids],
@@ -162,7 +162,7 @@ def test_vectorized_planes_match_schedule():
     """bitplane_coeff_planes/column_bitplanes: table op == per-scalar loop."""
     from repro.core import gf, rapidraid as rr
     from repro.storage import chain
-    code = rr.make_code(6, 4, l=16, seed=5)
+    code = rr.RapidRAIDCode.make(6, 4, l=16, seed=5)
     bp_psi, bp_xi = chain.bitplane_coeff_planes(code)
     sched = code.chain
     for i in range(code.n):
@@ -184,7 +184,7 @@ def test_vectorized_planes_match_schedule():
 def test_build_local_blocks_gather_matches_schedule():
     from repro.core import gf, rapidraid as rr
     from repro.storage import chain
-    code = rr.make_code(6, 4, l=16, seed=2)
+    code = rr.RapidRAIDCode.make(6, 4, l=16, seed=2)
     rng = np.random.default_rng(4)
     data = rng.integers(0, 1 << 16, size=(4, 32)).astype(np.uint16)
     out = chain.build_local_blocks(code, data)
@@ -203,7 +203,7 @@ def test_precondition_value_errors():
     """User-facing shape/divisibility preconditions raise ValueError."""
     from repro.core import rapidraid as rr
     from repro.storage import chain, multi, repair as rep
-    code = rr.make_code(8, 4, l=16, seed=0)
+    code = rr.RapidRAIDCode.make(8, 4, l=16, seed=0)
     data = np.zeros((4, 64), dtype=np.uint16)
     with pytest.raises(ValueError, match="k=4"):
         chain.pipelined_encode(code, data[:3])

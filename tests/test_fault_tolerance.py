@@ -4,7 +4,7 @@ import pytest
 from repro.core import fault_tolerance as ft, rapidraid as rr
 
 # the evaluated code of the paper (§VI): (16,11), GF(2^16)
-CODE_16_11 = rr.make_code(16, 11, l=16, seed=1)
+CODE_16_11 = rr.RapidRAIDCode.make(16, 11, l=16, seed=1)
 
 
 def test_nines_metric():

@@ -15,7 +15,7 @@ def rand_words(rng, k, B, l):
 @pytest.mark.parametrize("n,k", [(8, 4), (16, 11), (6, 4)])
 @pytest.mark.parametrize("cols", [512, 1024])
 def test_encode_kernel_sweep_rapidraid(l, n, k, cols):
-    code = rr.make_code(n, k, l=l, seed=1)
+    code = rr.RapidRAIDCode.make(n, k, l=l, seed=1)
     rng = np.random.default_rng(0)
     B = cols * gf.LANES[l]
     data = rand_words(rng, k, B, l)
@@ -25,7 +25,7 @@ def test_encode_kernel_sweep_rapidraid(l, n, k, cols):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     # and against the word-level table oracle
     np.testing.assert_array_equal(
-        np.asarray(gf.unpack_u32(got, l)), rr.encode_np(code, data))
+        np.asarray(gf.unpack_u32(got, l)), code.encode_np(data))
 
 
 @pytest.mark.parametrize("l", [8, 16])
@@ -42,14 +42,14 @@ def test_encode_kernel_classical_parity(l):
 def test_encode_kernel_multi_tile_grid(block):
     """Grid > 1: tiling must not leak across block boundaries."""
     l, n, k = 8, 8, 4
-    code = rr.make_code(n, k, l=l, seed=3)
+    code = rr.RapidRAIDCode.make(n, k, l=l, seed=3)
     rng = np.random.default_rng(2)
     B = block * 4 * gf.LANES[l]  # 4 grid steps
     data = rand_words(rng, k, B, l)
     dp = gf.pack_u32(jnp.asarray(data), l)
     got = ops.encode_packed(code.G, dp, l, block=block)
     np.testing.assert_array_equal(
-        np.asarray(gf.unpack_u32(got, l)), rr.encode_np(code, data))
+        np.asarray(gf.unpack_u32(got, l)), code.encode_np(data))
 
 
 @pytest.mark.parametrize("l", [8, 16])
@@ -77,12 +77,12 @@ def test_chain_step_kernel(l, max_b):
 @pytest.mark.parametrize("l", [8, 16])
 @pytest.mark.parametrize("n,k", [(8, 4), (16, 11)])
 def test_mxu_bitlift_kernel(l, n, k):
-    code = rr.make_code(n, k, l=l, seed=5)
+    code = rr.RapidRAIDCode.make(n, k, l=l, seed=5)
     rng = np.random.default_rng(4)
     B = 1024
     data = rand_words(rng, k, B, l)
     got = ops.encode_mxu(code.G, jnp.asarray(data), l, block=1024)
-    np.testing.assert_array_equal(np.asarray(got), rr.encode_np(code, data))
+    np.testing.assert_array_equal(np.asarray(got), code.encode_np(data))
 
 
 @pytest.mark.parametrize("l,B", [(8, 1000), (16, 998), (16, 1002)])
@@ -91,10 +91,10 @@ def test_mxu_vpu_numpy_parity_ragged_lengths(l, B):
     lengths): MXU bit-lift, VPU bit-plane, and the numpy oracle must agree.
     Regression for the bare-assert crash (MXU) and the block=1 per-word
     grid degeneration (pick_block on odd packed lengths)."""
-    code = rr.make_code(8, 4, l=l, seed=7)
+    code = rr.RapidRAIDCode.make(8, 4, l=l, seed=7)
     rng = np.random.default_rng(6)
     data = rand_words(rng, 4, B, l)
-    want = rr.encode_np(code, data)
+    want = code.encode_np(data)
     got_mxu = ops.encode_mxu(code.G, jnp.asarray(data), l, block=1024)
     assert got_mxu.dtype == gf.WORD_DTYPE[l]  # l=16 output dtype round-trips
     np.testing.assert_array_equal(np.asarray(got_mxu), want)
@@ -105,7 +105,7 @@ def test_mxu_vpu_numpy_parity_ragged_lengths(l, B):
 def test_encode_packed_ragged_odd_packed_length():
     """Odd packed length straight through encode_packed (pad-and-slice)."""
     l = 16
-    code = rr.make_code(6, 4, l=l, seed=9)
+    code = rr.RapidRAIDCode.make(6, 4, l=l, seed=9)
     rng = np.random.default_rng(8)
     data = rand_words(rng, 4, 998, l)            # Bp = 499, odd
     dp = gf.pack_u32(jnp.asarray(data), l)
@@ -113,7 +113,7 @@ def test_encode_packed_ragged_odd_packed_length():
     got = ops.encode_packed(code.G, dp, l)
     assert got.shape == (6, 499)
     np.testing.assert_array_equal(
-        np.asarray(gf.unpack_u32(got, l)), rr.encode_np(code, data))
+        np.asarray(gf.unpack_u32(got, l)), code.encode_np(data))
 
 
 def test_pick_block_never_degenerates():

@@ -23,7 +23,7 @@ from tests.subproc import run_with_devices
 @pytest.mark.parametrize("l", [8, 16])
 def test_batched_encode_kernel_b8_matches_encode_np(l):
     """One fused launch over B=8 objects == 8 independent encode_np calls."""
-    code = rr.make_code(16, 11, l=l, seed=1)
+    code = rr.RapidRAIDCode.make(16, 11, l=l, seed=1)
     rng = np.random.default_rng(0)
     B_obj, B = 8, 512 * gf.LANES[l]
     objs = rng.integers(0, 1 << l, size=(B_obj, 11, B)).astype(gf.WORD_DTYPE[l])
@@ -33,7 +33,7 @@ def test_batched_encode_kernel_b8_matches_encode_np(l):
         np.asarray(got), np.asarray(ref.encode_packed_many_ref(code.G, dp, l)))
     for b in range(B_obj):
         np.testing.assert_array_equal(
-            np.asarray(gf.unpack_u32(got[b], l)), rr.encode_np(code, objs[b]))
+            np.asarray(gf.unpack_u32(got[b], l)), code.encode_np(objs[b]))
     # the single-object entry point is the batched kernel's B=1 slice
     got1 = ops.encode_packed(code.G, dp[0], l, block=256)
     np.testing.assert_array_equal(np.asarray(got1), np.asarray(got[0]))
@@ -82,7 +82,7 @@ def test_window_size_bounds():
 ])
 def test_staggered_local_oracle_matches_encode_np(n, k, chunks, b_obj, stagger):
     l = 16
-    code = rr.make_code(n, k, l=l, seed=5)
+    code = rr.RapidRAIDCode.make(n, k, l=l, seed=5)
     rng = np.random.default_rng(2)
     objs = rng.integers(0, 1 << l, size=(b_obj, k, chunks * 6)) \
         .astype(gf.WORD_DTYPE[l])
@@ -90,7 +90,7 @@ def test_staggered_local_oracle_matches_encode_np(n, k, chunks, b_obj, stagger):
                                                stagger=stagger)
     assert ticks == chunks + n - 1 + (b_obj - 1) * stagger
     for b in range(b_obj):
-        np.testing.assert_array_equal(got[b], rr.encode_np(code, objs[b]))
+        np.testing.assert_array_equal(got[b], code.encode_np(objs[b]))
 
 
 # ---------------------------------------------------------------------------
@@ -105,14 +105,14 @@ from repro.storage import multi
 
 n, k, l, chunks, b_obj, stagger = {n}, {k}, {l}, {chunks}, {b_obj}, {stagger}
 assert len(jax.devices()) == n, jax.devices()
-code = rr.make_code(n, k, l=l, seed=13)
+code = rr.RapidRAIDCode.make(n, k, l=l, seed=13)
 rng = np.random.default_rng(0)
 B = chunks * gf.LANES[l] * 8
 objs = rng.integers(0, 1 << l, size=(b_obj, k, B)).astype(gf.WORD_DTYPE[l])
 got = np.asarray(multi.pipelined_encode_many(code, objs, num_chunks=chunks,
                                              stagger=stagger))
 for b in range(b_obj):
-    np.testing.assert_array_equal(got[b], rr.encode_np(code, objs[b]))
+    np.testing.assert_array_equal(got[b], code.encode_np(objs[b]))
 print("OK", got.shape)
 """
 
@@ -135,11 +135,11 @@ import numpy as np, jax
 from repro.core import gf, rapidraid as rr
 from repro.storage import multi
 
-code = rr.make_code(8, 4, l=16, seed=13)
+code = rr.RapidRAIDCode.make(8, 4, l=16, seed=13)
 rng = np.random.default_rng(3)
 B = gf.LANES[16] * 8 * 4
 objs = rng.integers(0, 1 << 16, size=(3, 4, B)).astype(np.uint16)
-cw = np.stack([rr.encode_np(code, o) for o in objs])
+cw = np.stack([code.encode_np(o) for o in objs])
 ids = [0, 2, 3, 6, 7]          # same survivors for every object
 dec = np.asarray(multi.pipelined_decode_many(code, ids, cw[:, ids],
                                              num_chunks=4))

@@ -59,16 +59,16 @@ def test_mds_conjecture_small(n):
 @pytest.mark.parametrize("n,k", [(8, 4), (6, 4), (8, 6), (12, 9), (16, 11)])
 def test_encode_decode_roundtrip(n, k):
     l = 16
-    code = rr.make_code(n, k, l=l, seed=3)
+    code = rr.RapidRAIDCode.make(n, k, l=l, seed=3)
     rng = np.random.default_rng(0)
     data = rng.integers(0, 1 << l, size=(k, 24)).astype(gf.WORD_DTYPE[l])
-    c = rr.encode_np(code, data)
+    c = code.encode_np(data)
     assert c.shape == (n, 24)
     # decode from the first k shards if decodable, else from a known-good set
     dep = set(ft.dependent_ksubsets(code.G, k, l))
     for ids in itertools.islice(
             (s for s in itertools.combinations(range(n), k) if s not in dep), 5):
-        got = rr.decode_np(code, ids, c[list(ids)])
+        got = code.decode_np(ids, c[list(ids)])
         np.testing.assert_array_equal(got, data)
     for ids in itertools.islice(iter(dep), 2):
         with pytest.raises(ValueError):
@@ -76,12 +76,12 @@ def test_encode_decode_roundtrip(n, k):
 
 
 def test_decode_from_more_than_k_shards():
-    code = rr.make_code(8, 4, l=16, seed=3)
+    code = rr.RapidRAIDCode.make(8, 4, l=16, seed=3)
     rng = np.random.default_rng(1)
     data = rng.integers(0, 1 << 16, size=(4, 8)).astype(np.uint16)
-    c = rr.encode_np(code, data)
+    c = code.encode_np(data)
     ids = [0, 1, 4, 5, 7]  # contains the dependent 4-set but rank is still 4
-    got = rr.decode_np(code, ids, c[ids])
+    got = code.decode_np(ids, c[ids])
     np.testing.assert_array_equal(got, data)
 
 
@@ -90,24 +90,24 @@ def test_decode_from_more_than_k_shards():
 def test_property_any_k_of_n_decodes_when_mds(k, extra, seed):
     """Property: for MDS params (k >= n-3) every k-subset decodes the object."""
     n = min(k + extra, 2 * k)
-    code = rr.make_code(n, k, l=16, seed=seed)
+    code = rr.RapidRAIDCode.make(n, k, l=16, seed=seed)
     if ft.dependent_ksubsets(code.G, k, 16):
         return  # rare accidental dependency at this seed; not the property under test
     rng = np.random.default_rng(seed % 2 ** 16)
     data = rng.integers(0, 1 << 16, size=(k, 4)).astype(np.uint16)
-    c = rr.encode_np(code, data)
+    c = code.encode_np(data)
     for ids in itertools.combinations(range(n), k):
-        np.testing.assert_array_equal(rr.decode_np(code, ids, c[list(ids)]), data)
+        np.testing.assert_array_equal(code.decode_np(ids, c[list(ids)]), data)
 
 
 @pytest.mark.parametrize("n,k,chunks", [(8, 4, 4), (6, 4, 3), (16, 11, 8)])
 def test_pipeline_local_matches_matrix_encode(n, k, chunks):
     l = 16
-    code = rr.make_code(n, k, l=l, seed=5)
+    code = rr.RapidRAIDCode.make(n, k, l=l, seed=5)
     rng = np.random.default_rng(2)
     B = chunks * 6
     data = rng.integers(0, 1 << l, size=(k, B)).astype(gf.WORD_DTYPE[l])
-    want = rr.encode_np(code, data)
+    want = code.encode_np(data)
     got, ticks = rr.pipeline_encode_local(code, data, num_chunks=chunks)
     np.testing.assert_array_equal(got, want)
     assert ticks == chunks + n - 1  # Eq. (2): T = tau_block + (n-1) tau_pipe
@@ -115,15 +115,15 @@ def test_pipeline_local_matches_matrix_encode(n, k, chunks):
 
 def test_jnp_encode_matches_np():
     import jax.numpy as jnp
-    code = rr.make_code(8, 4, l=8, seed=9)
+    code = rr.RapidRAIDCode.make(8, 4, l=8, seed=9)
     rng = np.random.default_rng(3)
     data = rng.integers(0, 256, size=(4, 16)).astype(np.uint8)
     np.testing.assert_array_equal(np.asarray(rr.encode(code, jnp.asarray(data))),
-                                  rr.encode_np(code, data))
+                                  code.encode_np(data))
 
 
 def test_storage_overhead_16_11():
-    code = rr.make_code(16, 11)
+    code = rr.RapidRAIDCode.make(16, 11)
     assert abs(code.storage_overhead - 16 / 11) < 1e-9  # ~1.45x, paper §VI-A
 
 

@@ -54,10 +54,10 @@ def test_chain_pos_mirror():
 
 @pytest.mark.parametrize("n,k,l", [(8, 4, 8), (8, 4, 16), (6, 4, 16)])
 def test_repair_np_every_loss_count(n, k, l):
-    code = rr.make_code(n, k, l=l, seed=3)
+    code = rr.RapidRAIDCode.make(n, k, l=l, seed=3)
     rng = np.random.default_rng(0)
     data = rng.integers(0, 1 << l, size=(k, 64)).astype(gf.WORD_DTYPE[l])
-    cw = rr.encode_np(code, data)
+    cw = code.encode_np(data)
     for r in range(1, n - k + 1):
         missing = sorted(rng.choice(n, size=r, replace=False).tolist())
         ids = [i for i in range(n) if i not in missing]
@@ -67,10 +67,10 @@ def test_repair_np_every_loss_count(n, k, l):
 
 def test_repair_plan_coefficients_identity():
     """R @ c_helpers = c_missing for EVERY (n-k)-subset of a small code."""
-    code = rr.make_code(6, 4, l=16, seed=1)
+    code = rr.RapidRAIDCode.make(6, 4, l=16, seed=1)
     rng = np.random.default_rng(1)
     data = rng.integers(0, 1 << 16, size=(4, 16)).astype(np.uint16)
-    cw = rr.encode_np(code, data)
+    cw = code.encode_np(data)
     for missing in itertools.combinations(range(6), 2):
         alive = [i for i in range(6) if i not in missing]
         try:
@@ -82,7 +82,7 @@ def test_repair_plan_coefficients_identity():
 
 
 def test_repair_plan_rejects_overlap_and_undecodable():
-    code = rr.make_code(8, 4, l=16, seed=0)
+    code = rr.RapidRAIDCode.make(8, 4, l=16, seed=0)
     with pytest.raises(ValueError):
         ft.repair_plan(code, [1], [1, 2, 3, 4])      # row both missing+alive
     with pytest.raises(ValueError):
@@ -304,9 +304,9 @@ def test_degraded_read_property(off, ln, lost):
 def test_repair_over_limit_property(extra, seed):
     """Losing n-k+extra shards always raises, never fabricates data."""
     rng = np.random.default_rng(seed)
-    code = rr.make_code(8, 4, l=16, seed=11)
+    code = rr.RapidRAIDCode.make(8, 4, l=16, seed=11)
     data = rng.integers(0, 1 << 16, size=(4, 32)).astype(np.uint16)
-    cw = rr.encode_np(code, data)
+    cw = code.encode_np(data)
     missing = sorted(rng.choice(8, size=4 + extra, replace=False).tolist())
     ids = [i for i in range(8) if i not in missing]
     with pytest.raises(ValueError):
@@ -316,10 +316,10 @@ def test_repair_over_limit_property(extra, seed):
 
 
 def test_degraded_read_kernel_matches_np():
-    code = rr.make_code(8, 4, l=16, seed=2)
+    code = rr.RapidRAIDCode.make(8, 4, l=16, seed=2)
     rng = np.random.default_rng(3)
     data = rng.integers(0, 1 << 16, size=(4, 128)).astype(np.uint16)
-    cw = rr.encode_np(code, data)
+    cw = code.encode_np(data)
     ids = [0, 2, 4, 5, 7]
     sl = cw[ids][:, 32:96]
     want = rep.degraded_read_np(code, ids, sl, [1, 3])
@@ -340,11 +340,11 @@ from repro.storage import repair as rep
 
 n, k, l, chunks, n_lost = {n}, {k}, {l}, {chunks}, {n_lost}
 assert len(jax.devices()) == k, jax.devices()
-code = rr.make_code(n, k, l=l, seed=13)
+code = rr.RapidRAIDCode.make(n, k, l=l, seed=13)
 rng = np.random.default_rng(0)
 B = chunks * gf.LANES[l] * 8
 data = rng.integers(0, 1 << l, size=(k, B)).astype(gf.WORD_DTYPE[l])
-cw = rr.encode_np(code, data)
+cw = code.encode_np(data)
 missing = list(range(n_lost))
 ids = [i for i in range(n) if i not in missing]
 got = np.asarray(rep.pipelined_repair(code, ids, cw[ids], missing,
@@ -374,11 +374,11 @@ import numpy as np, jax
 from repro.core import gf, rapidraid as rr
 from repro.storage import repair as rep
 
-code = rr.make_code(8, 4, l=16, seed=13)
+code = rr.RapidRAIDCode.make(8, 4, l=16, seed=13)
 rng = np.random.default_rng(3)
 B = gf.LANES[16] * 4 * 8
 objs = rng.integers(0, 1 << 16, size=(3, 4, B)).astype(np.uint16)
-cws = np.stack([rr.encode_np(code, o) for o in objs])
+cws = np.stack([code.encode_np(o) for o in objs])
 missing = [2, 6]
 ids = [i for i in range(8) if i not in missing]
 for stagger in (1, 4):

@@ -10,12 +10,12 @@ from repro.storage import chain
 
 n, k, l, chunks = {n}, {k}, {l}, {chunks}
 assert len(jax.devices()) == n, jax.devices()
-code = rr.make_code(n, k, l=l, seed=13)
+code = rr.RapidRAIDCode.make(n, k, l=l, seed=13)
 rng = np.random.default_rng(0)
 B = chunks * gf.LANES[l] * 8
 data = rng.integers(0, 1 << l, size=(k, B)).astype(gf.WORD_DTYPE[l])
 got = np.asarray(chain.pipelined_encode(code, data, num_chunks=chunks))
-want = rr.encode_np(code, data)
+want = code.encode_np(data)
 np.testing.assert_array_equal(got, want)
 # every codeword block must live on its own device (no post-encode scatter)
 print("OK", got.shape)
@@ -41,13 +41,13 @@ import numpy as np, jax
 from repro.core import gf, rapidraid as rr
 from repro.storage import chain
 
-code = rr.make_code(8, 4, l=8, seed=13)
+code = rr.RapidRAIDCode.make(8, 4, l=8, seed=13)
 rng = np.random.default_rng(2)
 data = rng.integers(0, 256, size=(4, 64)).astype(np.uint8)
 cw = np.asarray(chain.pipelined_encode(code, data, num_chunks=4))
 # lose any 4 devices; recover from the survivors
 survivors = [0, 2, 3, 6]
-rec = rr.decode_np(code, survivors, cw[survivors])
+rec = code.decode_np(survivors, cw[survivors])
 np.testing.assert_array_equal(rec, data)
 print("OK")
 """
@@ -95,11 +95,11 @@ from repro.core import gf, rapidraid as rr
 from repro.storage import chain
 
 n, k, l = {n}, {k}, {l}
-code = rr.make_code(n, k, l=l, seed=13)
+code = rr.RapidRAIDCode.make(n, k, l=l, seed=13)
 rng = np.random.default_rng(3)
 B = gf.LANES[l] * 8 * 8
 data = rng.integers(0, 1 << l, size=(k, B)).astype(gf.WORD_DTYPE[l])
-cw = rr.encode_np(code, data)
+cw = code.encode_np(data)
 ids = {ids}                                 # any k+1 survivors
 got = np.asarray(chain.pipelined_decode(code, ids, cw[ids], num_chunks=8))
 np.testing.assert_array_equal(got, data)
@@ -157,7 +157,7 @@ from repro.core.topology import Topology
 from repro.storage import chain, multi
 
 n, k, l = 8, 5, 16
-code = rr.make_code(n, k, l=l, seed=13)
+code = rr.RapidRAIDCode.make(n, k, l=l, seed=13)
 topo = Topology.uniform(n, tick_overhead=1e-3).with_slow(3, 4)
 plan = plan_chain(topo, k, block_bytes=1024.0)
 order = list(plan.order)
@@ -165,7 +165,7 @@ assert order != list(range(n))              # the slow node moved
 rng = np.random.default_rng(3)
 B = gf.LANES[l] * 4 * 8
 data = rng.integers(0, 1 << l, size=(k, B)).astype(gf.WORD_DTYPE[l])
-want = rr.encode_np(code, data)
+want = code.encode_np(data)
 # scheduler placement through the REAL device chain: device order[p] plays
 # position p; the codeword is placement-invariant
 got = np.asarray(chain.pipelined_encode(code, data, num_chunks=4,
@@ -176,7 +176,7 @@ objs = rng.integers(0, 1 << l, size=(3, k, B)).astype(gf.WORD_DTYPE[l])
 got_many = np.asarray(multi.pipelined_encode_many(code, objs, num_chunks=4,
                                                   order=order))
 for b in range(3):
-    np.testing.assert_array_equal(got_many[b], rr.encode_np(code, objs[b]))
+    np.testing.assert_array_equal(got_many[b], code.encode_np(objs[b]))
 print("OK")
 """
 
