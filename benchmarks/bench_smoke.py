@@ -35,6 +35,7 @@ from benchmarks import fig_codes
 from benchmarks import fig_hetero
 from benchmarks import fig_lifecycle
 from benchmarks import fig_repair_times as figr
+from benchmarks import fig_streaming as figs
 from benchmarks import fig_throughput as figt
 
 # >30% regression in a pipeline speedup fails the diff
@@ -57,6 +58,15 @@ def extract_speedups(results: dict) -> dict[str, float]:
                 row["star_s"] / row["pipelined_s"])
     for row in results["model"]["hetero"]:
         sp[f"model_hetero_{row['slow_factor']}x"] = row["speedup"]
+    for row in results["model"].get("streaming", []):
+        # per-budget footprint reduction of the streamed archive vs the
+        # monolithic encode, and the cross-stripe overlap speedup of S
+        # double-buffered stripes vs sequential stripe launches — pure
+        # plan/model arithmetic, so blocking
+        sp[f"model_streaming_footprint_{row['budget_mb']}mb"] = (
+            row["footprint_reduction"])
+        sp[f"model_streaming_overlap_{row['budget_mb']}mb"] = (
+            row["overlap_speedup"])
     for row in results["model"].get("ckpt", []):
         if row["arch"].startswith("grok"):
             # replicated/coded checkpoint bytes at the grok-314b dry-run
@@ -94,6 +104,11 @@ def extract_speedups(results: dict) -> dict[str, float]:
     het = real.get("hetero_forced_slow", {})
     if "speedup" in het:
         sp["real_hetero_forced_slow"] = het["speedup"]
+    st = real.get("streaming", {})
+    if "mono_s" in st:
+        # streamed vs monolithic archive wall-clock (byte-identical
+        # outputs; the footprint win is the blocking model key above)
+        sp["real_streaming_archive"] = st["ratio"]
     ck = real.get("ckpt", {})
     if "repl_s" in ck:
         # host-serialize + 3 replica writes vs the device-direct coded save
@@ -210,6 +225,7 @@ def main() -> int:
             "lifecycle": fig_lifecycle.network_model(),
             "codes": fig_codes.network_model(),
             "ckpt": figc.model_overhead(),
+            "streaming": figs.network_model(),
         },
         "real": {},
     }
@@ -246,6 +262,10 @@ def main() -> int:
     except Exception as e:  # noqa: BLE001
         real["ckpt"] = {"error": str(e)[:500]}
     try:
+        real["streaming"] = figs.real_streaming(mb=4)
+    except Exception as e:  # noqa: BLE001
+        real["streaming"] = {"error": str(e)[:500]}
+    try:
         real["codes_soak"] = fig_codes.real_soak(ticks=25)
     except Exception as e:  # noqa: BLE001
         real["codes_soak"] = {"error": str(e)[:500]}
@@ -270,6 +290,11 @@ def main() -> int:
     # 3-replication costs 3.0x, at every zoo architecture's dry-run shapes
     ok = ok and all(r["coded_overhead"] <= 1.5 and r["savings"] >= 2.0
                     for r in results["model"]["ckpt"])
+    # streaming gate: every planned stripe's modeled footprint fits its
+    # budget and the cross-stripe overlap schedule never costs ticks
+    ok = ok and all(r["est_stripe_bytes"] <= r["budget_mb"] << 20
+                    and r["overlap_speedup"] >= 1.0
+                    for r in results["model"]["streaming"])
     if "error" not in real["lifecycle"]:
         ok = ok and real["lifecycle"]["lost_objects"] == 0
     failures: list[str] = []

@@ -11,6 +11,7 @@
   fig_lifecycle       (beyond paper) replication->coding migration + churn
   fig_codes           (beyond paper) code families: LRC / MBR vs RapidRAID
   fig_checkpoint      (beyond paper) device-direct ckpt vs 3-replication
+  fig_streaming       (beyond paper) streaming archival footprint/throughput
   roofline            EXPERIMENTS.md roofline table from dry-run artifacts
 
 ``python -m benchmarks.run [--only name]``
@@ -24,8 +25,8 @@ import traceback
 from benchmarks import (chain_tuning, fig3_dependencies, fig4_coding_times,
                         fig5_congestion, fig_checkpoint, fig_codes,
                         fig_hetero, fig_lifecycle, fig_repair_times,
-                        fig_throughput, roofline, table1_resilience,
-                        table2_cpu_cost)
+                        fig_streaming, fig_throughput, roofline,
+                        table1_resilience, table2_cpu_cost)
 
 MODULES = [
     ("table1_resilience", table1_resilience),
@@ -39,6 +40,7 @@ MODULES = [
     ("fig_lifecycle", fig_lifecycle),
     ("fig_codes", fig_codes),
     ("fig_checkpoint", fig_checkpoint),
+    ("fig_streaming", fig_streaming),
     ("chain_tuning", chain_tuning),
     ("roofline", roofline),
 ]

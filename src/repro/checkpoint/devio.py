@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gf, jitcache, rapidraid
+from repro.core import gf, jitcache, rapidraid, streaming
 from repro.storage import archive as arc
 from repro.storage import chain as chain_lib
 from repro.storage import object_store as obj
@@ -224,7 +224,8 @@ def _mesh_order(mesh, n: int):
 
 def save_state(store, step: int, state, acfg: arc.ArchiveConfig,
                mesh=None, num_chunks: int | None = None,
-               use_devices: bool | None = None) -> dict:
+               use_devices: bool | None = None,
+               footprint_bytes: int | None = None) -> dict:
     """Erasure-code ``state`` straight from its device buffers into the
     coded tier (no hot replicas, no host blob). Returns the manifest.
 
@@ -233,6 +234,15 @@ def save_state(store, step: int, state, acfg: arc.ArchiveConfig,
     state already lives on. Without it (or with fewer devices than n) the
     encode runs as one fused kernel launch — the same program shape, still
     compiled once per state layout.
+
+    ``footprint_bytes`` (default: the ``RAPIDRAID_STREAM_BUDGET_BYTES``
+    env knob) bounds the encode's per-device bytes: a state whose modeled
+    device-direct footprint exceeds it routes through the STREAMING path
+    instead — host serialization, then super-chunk stripes through one
+    cached chain program into atomic framed writes
+    (``archive.publish_streaming_archive``) — so grok-scale states
+    checkpoint under a fixed device budget. States that fit keep the
+    zero-host-blob device-direct program.
     """
     code = acfg.code()
     if not code.positionwise:
@@ -242,6 +252,19 @@ def save_state(store, step: int, state, acfg: arc.ArchiveConfig,
             f"path (manager.save) or pick family='rapidraid'/'lrc'")
     layout = state_layout(state)
     B = obj.block_bytes_for(layout.blob_len, acfg.k, lane_bytes=LANE_BYTES)
+    if footprint_bytes is None:
+        footprint_bytes = streaming.budget_from_env()
+    if (footprint_bytes is not None
+            and streaming.estimate_stripe_bytes(code, B * 8 // acfg.l)
+            > footprint_bytes):
+        blob = obj.tree_to_bytes(state)
+        blocks = obj.split_blocks(blob, acfg.k, lane_bytes=LANE_BYTES)
+        sc_words = streaming.superchunk_words_for(
+            footprint_bytes, code, num_chunks or acfg.num_chunks)
+        return arc.publish_streaming_archive(
+            store, step, acfg, blocks, len(blob),
+            superchunk_bytes=sc_words * (acfg.l // 8),
+            state_key=layout.key[0], use_devices=use_devices)
     nc = _chunk_count(B * 8 // acfg.l, acfg.l, num_chunks or acfg.num_chunks)
     order = _mesh_order(mesh, acfg.n)
     if use_devices is None:
@@ -294,8 +317,10 @@ def restore_state(store, step: int, like, acfg: arc.ArchiveConfig,
     coded = (arc._manifest_code(manifest)
              if manifest["tier"] == "archive" else None)
     if (manifest["tier"] != "archive" or manifest.get("hot_retained")
-            or not coded.positionwise):
-        # sub-packetized families restore through the host decode path
+            or manifest.get("streaming") or not coded.positionwise):
+        # sub-packetized families and STREAMED archives restore through the
+        # host decode path (restore_blocks reads streamed steps stripe-by-
+        # stripe against the manifest's per-stripe digests)
         blocks = arc.restore_blocks(store, step, acfg)
         blob = obj.join_blocks(blocks, blob_len or layout.blob_len)
         tree = obj.bytes_to_leaves(blob, like)

@@ -44,3 +44,27 @@ def pcast_varying(x, axis_name: str):
     if hasattr(lax, "pcast"):
         return lax.pcast(x, (axis_name,), to="varying")
     return x
+
+
+def memory_analysis(compiled) -> int | None:
+    """Peak live device bytes of a compiled program, across jax versions.
+
+    Newer jaxlibs expose ``peak_memory_in_bytes``; older ones only the
+    argument/output/temp breakdown, whose sum bounds the peak (the number
+    the streaming footprint tests budget against). Returns None when the
+    backend provides no memory analysis at all (some CPU plugins).
+    """
+    try:
+        mem = compiled.memory_analysis()
+    except (AttributeError, NotImplementedError):
+        return None
+    if mem is None:
+        return None
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is not None:
+        return int(peak)
+    try:
+        return int(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   + mem.temp_size_in_bytes)
+    except AttributeError:
+        return None

@@ -15,7 +15,13 @@ program ONCE per logical key
 
     (entry point, code, mesh, shapes, num_chunks, direction, ...)
 
-and this module memoizes the resulting callable. Because the SAME callable
+and this module memoizes the resulting callable. Since the streaming
+super-chunk refactor (``repro.core.streaming``) the shape element of every
+chain key is the SUPER-CHUNK width (``plan.sc_words``), not the object
+length: a non-streaming call's plan has ``sc_words == total_words`` so its
+key is unchanged, while an object split into S stripes maps every stripe
+onto one key — S super-chunks compile exactly one program, and the
+trace-count tests assert that too. Because the SAME callable
 object is returned on every warm call, jax's jit cache then guarantees no
 retrace for identical input shapes — ``compile_counts`` exposes the per-key
 trace counts so tests can assert exactly that.

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -137,15 +136,6 @@ def _make_canonical(n: int, k: int, l: int = 16, seed: int = 0) -> RapidRAIDCode
     return RapidRAIDCode.make(n, k, l=l, seed=seed)
 
 
-def make_code(n: int, k: int, l: int = 16, seed: int = 0) -> RapidRAIDCode:
-    """Deprecated: use ``repro.core.codes.make('rapidraid', n, k, ...)``."""
-    warnings.warn(
-        "rapidraid.make_code is deprecated; use "
-        "repro.core.codes.make('rapidraid', n, k, l=l, seed=seed)",
-        DeprecationWarning, stacklevel=2)
-    return RapidRAIDCode.make(n, k, l=l, seed=seed)
-
-
 # ---------------------------------------------------------------------------
 # Encoding / decoding (single-process; the distributed path is repro.storage)
 # ---------------------------------------------------------------------------
@@ -154,13 +144,6 @@ def encode(code: RapidRAIDCode, data: jnp.ndarray) -> jnp.ndarray:
     """Matrix-form encode: data (k, B) words -> codeword blocks (n, B)."""
     assert data.shape[0] == code.k
     return gf.gf_matmul(code.G, data, code.l)
-
-
-def encode_np(code: RapidRAIDCode, data: np.ndarray) -> np.ndarray:
-    """Deprecated: use ``code.encode_np(data)`` (ErasureCode API)."""
-    warnings.warn("rapidraid.encode_np is deprecated; use code.encode_np",
-                  DeprecationWarning, stacklevel=2)
-    return code.encode_np(data)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -276,10 +259,3 @@ def decode(code, ids, shards: jnp.ndarray) -> jnp.ndarray:
     """Reconstruct the k original blocks from any decodable shard subset."""
     D = code.decode_matrix(ids)
     return gf.gf_matmul(D, shards, code.l)
-
-
-def decode_np(code, ids, shards: np.ndarray) -> np.ndarray:
-    """Deprecated: use ``code.decode_np(ids, shards)`` (ErasureCode API)."""
-    warnings.warn("rapidraid.decode_np is deprecated; use code.decode_np",
-                  DeprecationWarning, stacklevel=2)
-    return code.decode_np(ids, shards)

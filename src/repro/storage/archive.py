@@ -36,13 +36,14 @@ mapping so decode is permutation-aware.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classical, codes, fault_tolerance, gf, rapidraid
+from repro.core import classical, codes, fault_tolerance, gf, rapidraid, streaming
 from repro.storage import chain as chain_lib
 from repro.storage import multi as multi_lib
 from repro.storage import repair as repair_lib
@@ -171,13 +172,28 @@ def _device_order(perm: np.ndarray, scheduled: bool) -> list[int] | None:
 def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
                  node_speeds: np.ndarray | None = None,
                  use_devices: bool | None = None,
-                 topology=None, reclaim_hot: bool = True) -> dict:
+                 topology=None, reclaim_hot: bool = True,
+                 superchunk_bytes: int | None = None) -> dict:
     """Migrate step's hot replicas to RapidRAID coded blocks; drop hot.
 
     ``topology`` engages the heterogeneity-aware scheduler
     (``repro.core.scheduler``): chain placement + chunk count chosen against
     the topology's makespan model and recorded in the manifest
     (``perm`` / ``sched``), so repair and decode reuse the placement.
+
+    ``superchunk_bytes`` streams the migration: the object archives as
+    independent super-chunk stripes through the streaming executor
+    (``repro.core.streaming``) — each stripe's hot slices are range-read
+    off the replicas, encoded through ONE cached pipeline program, and
+    framed into atomic ``put_stream`` writers, so neither peak device nor
+    peak host bytes ever hold the object. Positionwise codes write coded
+    blocks BYTE-IDENTICAL to the monolithic path (same digests, every
+    existing reader works unchanged); the manifest additionally records
+    the stripe geometry + per-stripe digests (``streaming``) so restore
+    and scrub can verify stripe-by-stripe. Hot digests are checked
+    incrementally as stripes are read, and a mismatch aborts the coded
+    writes BEFORE anything is published. Sub-packetized families cannot
+    stream (raises ValueError).
 
     ``reclaim_hot=False`` defers the replica deletion: the step is coded
     and readable from the archive tier, but the hot replicas stay on disk
@@ -188,13 +204,29 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
     manifest = get_manifest(store, step)
     if manifest["tier"] != "hot":
         raise ValueError(f"step {step} already archived")
-    blocks = hot_load(store, step, manifest)
     code = acfg.code()
 
     # chain position p stores codeword row p on physical node perm[p]
     perm, nc, sched = _plan_placement(acfg, manifest["block_bytes"],
                                       topology, node_speeds)
 
+    if superchunk_bytes is not None:
+        wb = acfg.l // 8
+        plan = streaming.plan_stream(manifest["block_bytes"] // wb,
+                                     max(1, superchunk_bytes // wb),
+                                     l=acfg.l, num_chunks=nc)
+        if plan.streaming:
+            if not code.positionwise:
+                raise ValueError(
+                    f"archive_step: {code.family} is sub-packetized — "
+                    f"stripe concatenation is not a codeword, so it cannot "
+                    f"stream (archive without superchunk_bytes)")
+            return _archive_step_streaming(
+                store, step, acfg, manifest, code, perm, nc, sched, plan,
+                use_devices, reclaim_hot)
+        # plan degenerated to one stripe: the monolithic path IS the stream
+
+    blocks = hot_load(store, step, manifest)
     data_w = _words(blocks, acfg.l)
     # largest feasible chunk count: every chunk must be whole uint32 lanes
     # (the device chain's granularity; the host oracle only needs nc | B,
@@ -230,6 +262,116 @@ def archive_step(store: NodeStore, step: int, acfg: ArchiveConfig,
         "perm": [int(p) for p in perm],
         "coded_digests": [digest(b) for b in coded_blobs],
         "orig_digests": manifest["digests"],
+    }
+    if not reclaim_hot:
+        manifest["hot_retained"] = True
+    if sched is not None:
+        manifest["sched"] = sched
+    _put_manifest(store, step, manifest)
+    return manifest
+
+
+def _hot_holders(store: NodeStore, step: int, manifest: dict) -> list[int]:
+    """One replica-holding node per hot block (existence probe only)."""
+    holders = []
+    for j in range(manifest["k"]):
+        rel = HOT.format(step=step, j=j)
+        cands = [i for i, held in enumerate(manifest["placement"])
+                 if j in held and store.has(i, rel)]
+        if not cands:
+            raise FileNotFoundError(
+                f"hot block {j} of step {step} lost on all replicas")
+        holders.append(cands[0])
+    return holders
+
+
+def _archive_step_streaming(store: NodeStore, step: int, acfg: ArchiveConfig,
+                            manifest: dict, code, perm: np.ndarray, nc: int,
+                            sched: dict | None, plan: streaming.StreamPlan,
+                            use_devices: bool | None,
+                            reclaim_hot: bool) -> dict:
+    """The streamed migration: hot range-reads -> stripe encodes -> framed
+    coded writes, never holding the object (see ``archive_step``)."""
+    k, n, l = acfg.k, acfg.n, acfg.l
+    wb = l // 8
+    if sched is not None:
+        sched = {**sched, "num_chunks": int(nc)}
+    holders = _hot_holders(store, step, manifest)
+    hot_rel = [HOT.format(step=step, j=j) for j in range(k)]
+    # hot digests accumulate as the stripes stream past; verified BEFORE
+    # any coded write publishes (the writers abort on mismatch)
+    orig_sha = [hashlib.sha256() for _ in range(k)]
+
+    def get_stripe(s: int) -> np.ndarray:
+        lo, hi = plan.stripe_span(s)
+        nb = (hi - lo) * wb
+        rows = np.zeros((k, plan.sc_words * wb), np.uint8)  # tail zero-padded
+        for j in range(k):
+            raw = store.get_range(holders[j], hot_rel[j], lo * wb, nb)
+            if len(raw) != nb:
+                raise ValueError(
+                    f"step {step}: hot block {j} short read (stripe {s}: "
+                    f"got {len(raw)} of {nb} bytes)")
+            orig_sha[j].update(raw)
+            rows[j, :nb] = np.frombuffer(raw, dtype=np.uint8)
+        return rows.view(gf.WORD_DTYPE[l])
+
+    writers = [store.put_stream(int(perm[pos]), ARC.format(step=step, i=pos))
+               for pos in range(n)]
+    stripes: list[dict] = []
+
+    def put_stripe(s: int, out_w: np.ndarray) -> None:
+        frame = _u8(out_w[:, :plan.stripe_words(s)])
+        recs = []
+        for pos in range(n):
+            blob = frame[pos].tobytes()
+            writers[pos].write(blob)
+            recs.append(digest(blob))
+        stripes.append({"words": int(plan.stripe_words(s)),
+                        "coded_digests": recs})
+
+    if use_devices is None:
+        use_devices = len(jax.devices()) >= n
+    try:
+        if use_devices and code.supports_chain_encode:
+            program = chain_lib.encode_program(
+                code, plan.sc_words, nc,
+                order=_device_order(perm, sched is not None))
+            streaming.execute(plan, program, get_stripe, put_stripe)
+        else:
+            # host oracle, stripe by stripe (positionwise: concatenation of
+            # stripe encodes == the monolithic encode, bit-exactly)
+            for s in range(plan.num_superchunks):
+                put_stripe(s, np.asarray(code.encode_np(get_stripe(s))))
+        for j in range(k):
+            if orig_sha[j].hexdigest()[:16] != manifest["digests"][j]:
+                raise ValueError(
+                    f"step {step}: hot block {j} does not match its manifest "
+                    f"digest — streamed archive aborted, nothing published")
+    except BaseException:
+        for w in writers:
+            w.abort()
+        raise
+    for w in writers:
+        w.close()
+
+    if reclaim_hot:
+        for node, held in enumerate(manifest["placement"]):
+            for j in held:
+                store.delete(node, HOT.format(step=step, j=j))
+    manifest = {
+        **manifest, "tier": "archive", "family": acfg.family,
+        "perm": [int(p) for p in perm],
+        # incremental frame hashes == whole-file digests, identical to the
+        # monolithic path's (the files are byte-identical)
+        "coded_digests": [w.digest() for w in writers],
+        "orig_digests": manifest["digests"],
+        "streaming": {
+            "num_superchunks": int(plan.num_superchunks),
+            "superchunk_bytes": int(plan.sc_words * wb),
+            "num_chunks": int(nc),
+            "stripes": stripes,
+        },
     }
     if not reclaim_hot:
         manifest["hot_retained"] = True
@@ -450,6 +592,8 @@ def restore_blocks(store: NodeStore, step: int, acfg: ArchiveConfig,
     manifest = get_manifest(store, step)
     if manifest["tier"] == "hot":
         return hot_load(store, step, manifest)
+    if manifest["tier"] == "archive" and manifest.get("streaming"):
+        return _restore_streaming(store, step, acfg, manifest, heal=heal)
     alive = _alive_coded(store, step, manifest)
     if heal and manifest["tier"] == "archive" and len(alive) < manifest["n"]:
         try:
@@ -497,6 +641,81 @@ def restore_blocks(store: NodeStore, step: int, acfg: ArchiveConfig,
 def _manifest_code(manifest: dict) -> codes.ErasureCode:
     """Reconstruct the exact code a manifest describes (any family)."""
     return codes.from_spec(codes.CodeSpec.from_manifest(manifest))
+
+
+def _restore_streaming(store: NodeStore, step: int, acfg: ArchiveConfig,
+                       manifest: dict, heal: bool = False) -> np.ndarray:
+    """Stripe-at-a-time restore of a streamed archive.
+
+    Reads only each stripe's word range of k helper shards
+    (``NodeStore.get_range``) and verifies it against the manifest's
+    per-stripe digests as it goes — a corrupt slice demotes that shard to
+    missing and the helper set is re-planned, so corruption is routed
+    around exactly as ``_alive_coded`` does for whole files, without ever
+    reading (or holding) more than k stripes at once.
+    """
+    code = _manifest_code(manifest)
+    k, B, l = manifest["k"], manifest["block_bytes"], manifest["l"]
+    wb = l // 8
+    stream = manifest["streaming"]
+    plan = streaming.plan_stream(B // wb, stream["superchunk_bytes"] // wb,
+                                 l=l, num_chunks=stream["num_chunks"])
+    perm = manifest["perm"]
+    if heal and any(not store.has(perm[pos], ARC.format(step=step, i=pos))
+                    for pos in range(manifest["n"])):
+        try:
+            repair(store, step, acfg)
+        except ValueError:
+            if not manifest.get("hot_retained"):
+                raise
+        manifest = get_manifest(store, step)   # perm may have changed
+        perm = manifest["perm"]
+    dead = {pos for pos in range(manifest["n"])
+            if not store.has(perm[pos], ARC.format(step=step, i=pos))}
+    out = np.zeros((k, B), dtype=np.uint8)
+    while True:
+        alive_ids = [p for p in range(manifest["n"]) if p not in dead]
+        helpers = None
+        if len(alive_ids) >= k:
+            try:
+                chosen = codes.independent_rows(code.G[alive_ids], k, l)
+                helpers = [alive_ids[p] for p in chosen]
+            except ValueError:
+                helpers = None
+        if helpers is None:
+            if manifest.get("hot_retained"):
+                # two-phase migration: the replicas still back the object
+                return hot_load(store, step, manifest)
+            raise FileNotFoundError(
+                f"step {step}: only {len(alive_ids)} decodable of "
+                f"n={manifest['n']} coded blocks, need k={k}")
+        D = code.decode_matrix(helpers)
+        corrupt = None
+        for s in range(plan.num_superchunks):
+            lo, hi = plan.stripe_span(s)
+            rec = stream["stripes"][s]
+            slices = []
+            for h in helpers:
+                raw = store.get_range(perm[h], ARC.format(step=step, i=h),
+                                      lo * wb, (hi - lo) * wb)
+                if digest(raw) != rec["coded_digests"][h]:
+                    corrupt = h
+                    break
+                slices.append(np.frombuffer(raw, dtype=np.uint8)
+                              .view(gf.WORD_DTYPE[l]))
+            if corrupt is not None:
+                break
+            out[:, lo * wb:hi * wb] = _u8(
+                gf.gf_matmul_np(D, np.stack(slices), l))
+        if corrupt is None:
+            break
+        dead.add(corrupt)
+    for j in range(k):
+        if digest(out[j].tobytes()) != manifest["orig_digests"][j]:
+            raise ValueError(
+                f"step {step}: decoded block {j} does not match the archived "
+                f"digest — corrupt shard set or code mismatch")
+    return out
 
 
 def _place_repaired(store: NodeStore, step: int, manifest: dict,
@@ -559,7 +778,8 @@ def _repair_state(store: NodeStore, step: int,
 
 def repair(store: NodeStore, step: int, acfg: ArchiveConfig,
            replacement_nodes: dict[int, int] | None = None,
-           use_devices: bool | None = None) -> list[int]:
+           use_devices: bool | None = None,
+           superchunk_bytes: int | None = None) -> list[int]:
     """Recompute lost coded blocks and place them (on replacements if given).
 
     Targeted repair: only the missing rows are reconstructed — one GF inner
@@ -575,13 +795,15 @@ def repair(store: NodeStore, step: int, acfg: ArchiveConfig,
     """
     return repair_many(store, [step], acfg,
                        replacement_nodes=replacement_nodes,
-                       use_devices=use_devices)[0]
+                       use_devices=use_devices,
+                       superchunk_bytes=superchunk_bytes)[0]
 
 
 def repair_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
                 replacement_nodes: dict[int, int] | None = None,
                 use_devices: bool | None = None,
-                stagger: int = 1) -> list[list[int]]:
+                stagger: int = 1,
+                superchunk_bytes: int | None = None) -> list[list[int]]:
     """Heal several archived steps CONCURRENTLY (batched repair).
 
     After a node failure every object archived on the node set lost the
@@ -593,6 +815,14 @@ def repair_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
     shards are read (digest-verified; corrupt helpers are demoted to
     missing and repaired too — see ``_repair_state``). Returns the repaired
     rows per step, in step order.
+
+    Streamed archives heal stripe-by-stripe: ``superchunk_bytes`` (or,
+    when unset, the geometry recorded in the step's ``streaming`` manifest)
+    runs the device reverse chains through the streaming executor — per-
+    stripe launches of one cached program, cross-stripe scheduled per Li
+    et al. — so a lost node on a many-stripe object repairs under the same
+    bounded device footprint it archived with. The repaired bytes are
+    identical either way (positionwise codes).
     """
     from repro.kernels.gf_encode import ops as kernel_ops
     manifests: dict[int, dict] = {}
@@ -640,11 +870,22 @@ def repair_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
                 use_devices_grp = use_devices
             if use_devices_grp:
                 nc = acfg.num_chunks
-                while nc > 1 and shards_w.shape[-1] % (gf.LANES[l] * nc):
-                    nc //= 2
+                sc_words = None
+                wb = l // 8
+                if superchunk_bytes is not None:
+                    sc_words = max(1, superchunk_bytes // wb)
+                else:
+                    stream = manifests[grp[0]].get("streaming")
+                    if stream:          # heal with the archive's geometry
+                        sc_words = stream["superchunk_bytes"] // wb
+                if sc_words is None or sc_words >= shards_w.shape[-1]:
+                    # identity plan: the monolithic chunking rules apply
+                    sc_words = None
+                    while nc > 1 and shards_w.shape[-1] % (gf.LANES[l] * nc):
+                        nc //= 2
                 repaired_w = np.asarray(repair_lib.pipelined_repair_many(
                     code, helpers, shards_w, missing, num_chunks=nc,
-                    stagger=stagger))
+                    stagger=stagger, superchunk_words=sc_words))
             else:
                 # helpers is already the plan's decodable helper set, so
                 # the plan over it returns the same set and an aligned R
@@ -679,16 +920,25 @@ def read_range(store: NodeStore, step: int, acfg: ArchiveConfig,
     first re-materializes any missing shards (full repair, digest-verified)
     so subsequent reads run non-degraded.
 
-    Offsets address the padded k*block_bytes object; callers holding a
-    ``blob_len`` manifest entry should clamp (``CheckpointManager.read_range``
-    does).
+    Offsets address the padded k*block_bytes object; out-of-bounds or
+    inverted ranges raise ValueError (no silent clamping — a caller that
+    wants clamp-to-EOF semantics owns the clamp, as
+    ``CheckpointManager.read_range`` does against its ``blob_len``).
+    Streamed archives (manifest ``streaming``) serve ranges identically:
+    positionwise stripes concatenate to the same coded bytes, so the
+    range read touches exactly the stripes that cover it.
     """
     manifest = get_manifest(store, step)
     k, B, l = manifest["k"], manifest["block_bytes"], manifest["l"]
-    if nbytes <= 0:
-        return b""
     end = offset + nbytes
-    assert 0 <= offset and end <= k * B, (offset, nbytes, k * B)
+    if offset < 0 or nbytes < 0 or end > k * B:
+        raise ValueError(
+            f"read_range: range [{offset}, {end}) is "
+            f"{'inverted' if nbytes < 0 else 'out of bounds'} for step "
+            f"{step}'s {k * B}-byte object (offset={offset}, "
+            f"nbytes={nbytes})")
+    if nbytes == 0:
+        return b""
     j0, j1 = offset // B, (end - 1) // B
 
     if manifest["tier"] == "hot":
@@ -801,6 +1051,99 @@ def publish_device_archive(store: NodeStore, step: int, acfg: ArchiveConfig,
     return manifest
 
 
+def publish_streaming_archive(store: NodeStore, step: int,
+                              acfg: ArchiveConfig, blocks: np.ndarray,
+                              blob_len: int, superchunk_bytes: int,
+                              state_key: str | None = None,
+                              use_devices: bool | None = None) -> dict:
+    """Stream an in-memory (k, B) block set into the coded tier under a
+    bounded device footprint.
+
+    The checkpoint streaming route (``repro.checkpoint.devio.save_state``
+    above its ``footprint_bytes`` threshold): the train state's blocks are
+    already on the host, but the ENCODE must not materialize the object on
+    the devices — each super-chunk stripe runs through one cached chain
+    program and frames straight into atomic ``put_stream`` writers. Same
+    manifest contract as ``publish_device_archive`` plus the ``streaming``
+    stripe records; no hot replicas ever hit disk.
+    """
+    code = acfg.code()
+    if not code.positionwise:
+        raise ValueError(
+            f"publish_streaming_archive: {code.family} is sub-packetized — "
+            f"stripe concatenation is not a codeword")
+    if blocks.ndim != 2 or blocks.shape[0] != acfg.k \
+            or blocks.dtype != np.uint8:
+        raise ValueError(f"blocks must be (k={acfg.k}, B) uint8, "
+                         f"got {blocks.shape} {blocks.dtype}")
+    n, l = acfg.n, acfg.l
+    wb = l // 8
+    B = blocks.shape[1]
+    nc = acfg.num_chunks
+    plan = streaming.plan_stream(B // wb, max(1, superchunk_bytes // wb),
+                                 l=l, num_chunks=nc)
+    if not plan.streaming:
+        while nc > 1 and (B // wb) % (gf.LANES[l] * nc):
+            nc //= 2
+    data_w = _words(blocks, l)
+    writers = [store.put_stream(pos, ARC.format(step=step, i=pos))
+               for pos in range(n)]
+    stripes: list[dict] = []
+
+    def sink(s: int, out_w: np.ndarray) -> None:
+        frame = _u8(np.asarray(out_w))
+        recs = []
+        for pos in range(n):
+            blob = frame[pos].tobytes()
+            writers[pos].write(blob)
+            recs.append(digest(blob))
+        stripes.append({"words": int(out_w.shape[-1]),
+                        "coded_digests": recs})
+
+    if use_devices is None:
+        use_devices = len(jax.devices()) >= n
+    try:
+        if use_devices and code.supports_chain_encode:
+            fn = chain_lib.encode_program(code, plan.sc_words, nc)
+            streaming.run_words(fn, data_w, plan, sink=sink)
+        else:
+            for s in range(plan.num_superchunks):
+                lo, hi = plan.stripe_span(s)
+                stripe = data_w[:, lo:hi]
+                if hi - lo < plan.sc_words:   # zero-pad the tail stripe
+                    stripe = np.concatenate(
+                        [stripe, np.zeros((acfg.k, plan.sc_words - (hi - lo)),
+                                          data_w.dtype)], axis=1)
+                sink(s, np.asarray(code.encode_np(stripe))[:, :hi - lo])
+    except BaseException:
+        for w in writers:
+            w.abort()
+        raise
+    for w in writers:
+        w.close()
+
+    manifest = {
+        "step": step, "tier": "archive", "n": n, "k": acfg.k, "l": l,
+        "seed": acfg.seed, "family": acfg.family, "block_bytes": int(B),
+        "digests": [digest(blocks[j].tobytes()) for j in range(acfg.k)],
+        "placement": [list(h) for h in rapidraid.placement(n, acfg.k)],
+        "perm": list(range(n)),
+        "coded_digests": [w.digest() for w in writers],
+        "blob_len": int(blob_len),
+        "streaming": {
+            "num_superchunks": int(plan.num_superchunks),
+            "superchunk_bytes": int(plan.sc_words * wb),
+            "num_chunks": int(nc),
+            "stripes": stripes,
+        },
+    }
+    manifest["orig_digests"] = manifest["digests"]
+    if state_key is not None:
+        manifest["state_key"] = state_key
+    _put_manifest(store, step, manifest)
+    return manifest
+
+
 # ---------------------------------------------------------------------------
 # manifests (replicated on every node)
 # ---------------------------------------------------------------------------
@@ -836,6 +1179,19 @@ def _validate_manifest(manifest, step: int) -> dict:
         raise ValueError(f"step {step}: manifest ({tier}) is missing "
                          f"required keys {missing} — corrupt or "
                          f"partially written")
+    stream = manifest.get("streaming")
+    if stream is not None:
+        want = ("num_superchunks", "superchunk_bytes", "num_chunks",
+                "stripes")
+        absent = [key for key in want if key not in stream]
+        if absent:
+            raise ValueError(f"step {step}: streaming manifest record is "
+                             f"missing keys {absent}")
+        if len(stream["stripes"]) != stream["num_superchunks"]:
+            raise ValueError(
+                f"step {step}: streaming record claims "
+                f"{stream['num_superchunks']} super-chunks but carries "
+                f"{len(stream['stripes'])} stripe records")
     family = manifest.get("family", "rapidraid")
     if family not in codes.families():
         raise ValueError(

@@ -30,7 +30,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import compat, gf, jitcache, pipeline
+from repro.core import compat, gf, jitcache, pipeline, streaming
 from repro.core.codes import ErasureCode
 
 AXIS = "chain"
@@ -200,7 +200,9 @@ def _build_encode(code: ErasureCode, mesh: Mesh, num_chunks: int):
 
 
 def pipelined_encode(code: ErasureCode, data, num_chunks: int = 8,
-                     mesh: Mesh | None = None, order=None) -> jax.Array:
+                     mesh: Mesh | None = None, order=None,
+                     superchunk_words: int | None = None,
+                     sink=None) -> jax.Array | np.ndarray | None:
     """Archive object ``data`` (k, B) words -> codeword blocks (n, B) words.
 
     Each codeword block materializes on the device that will store it — no
@@ -208,9 +210,21 @@ def pipelined_encode(code: ErasureCode, data, num_chunks: int = 8,
     (scheduler placement) assigns device ``order[p]`` to chain position p;
     row p of the result lives on that device.
 
-    Warm path: one cached executable per (code, mesh, B, num_chunks) —
-    placement, packing, pipeline, and unpacking all inside it, so repeat
-    calls neither retrace nor touch the host beyond the input transfer.
+    This is a thin wrapper over the streaming super-chunk executor
+    (``repro.core.streaming``): with ``superchunk_words`` set, the object
+    streams through the chain as independent fixed-width stripes — each
+    one run of the SAME cached pipeline program — with stripe s+1's
+    host->device transfer and stripe s-1's ``sink`` I/O overlapping stripe
+    s's ticks, so peak device bytes are bounded by the stripe, not the
+    object. ``sink(s, coded_stripe)`` receives each trimmed (n, W) result
+    and suppresses full-object assembly (returns None). Positionwise
+    codes encode stripes bit-identically to the monolithic call; the
+    default single-stripe plan IS the monolithic call.
+
+    Warm path: one cached executable per (code, mesh, stripe width,
+    num_chunks) — placement, packing, pipeline, and unpacking all inside
+    it, so repeat calls (and every stripe of a streamed object) neither
+    retrace nor touch the host beyond the input transfer.
     """
     if not code.supports_chain_encode:
         raise ValueError(
@@ -220,14 +234,40 @@ def pipelined_encode(code: ErasureCode, data, num_chunks: int = 8,
     if data.ndim != 2 or data.shape[0] != code.k:
         raise ValueError(
             f"pipelined_encode: data {data.shape} must be (k={code.k}, B)")
-    _check_chunking(data.shape[1], code.l, num_chunks, "pipelined_encode")
+    plan = streaming.plan_stream(data.shape[1], superchunk_words,
+                                 l=code.l, num_chunks=num_chunks)
+    _check_chunking(plan.sc_words, code.l, num_chunks, "pipelined_encode")
     if mesh is not None and order is not None:
         raise ValueError("pass either mesh or order, not both")
     mesh = mesh or make_chain_mesh(code.n, order)
     fn = jitcache.get(
-        ("encode", code.cache_key, mesh, data.shape[1], num_chunks),
+        ("encode", code.cache_key, mesh, plan.sc_words, num_chunks),
         lambda: _build_encode(code, mesh, num_chunks))
-    return fn(data)
+    return streaming.run_words(fn, data, plan, sink=sink)
+
+
+def encode_program(code: ErasureCode, sc_words: int, num_chunks: int = 8,
+                   mesh: Mesh | None = None, order=None):
+    """The cached compiled encode program for one stripe geometry.
+
+    Store-driven streaming callers (``storage.archive.archive_step`` with
+    ``superchunk_bytes``) drive ``streaming.execute`` themselves — stripes
+    read straight off the hot tier, coded stripes framed into
+    ``NodeStore.put_stream`` writers — so they need the bare program
+    ((k, sc_words) -> (n, sc_words)) without the in-memory wrapper. Same
+    jitcache key as ``pipelined_encode``: a store-driven stream and an
+    in-memory stream of the same geometry share one executable.
+    """
+    if not code.supports_chain_encode:
+        raise ValueError(
+            f"encode_program: {code.family} has no chain schedule")
+    _check_chunking(sc_words, code.l, num_chunks, "encode_program")
+    if mesh is not None and order is not None:
+        raise ValueError("pass either mesh or order, not both")
+    mesh = mesh or make_chain_mesh(code.n, order)
+    return jitcache.get(
+        ("encode", code.cache_key, mesh, sc_words, num_chunks),
+        lambda: _build_encode(code, mesh, num_chunks))
 
 
 def _decode_shard(local, bp_node, *, k: int, l: int, num_chunks: int):
@@ -287,7 +327,9 @@ def _build_decode(code: ErasureCode, ids: tuple[int, ...], mesh: Mesh,
 
 
 def pipelined_decode(code: ErasureCode, ids, shards, num_chunks: int = 8,
-                     mesh: Mesh | None = None) -> jax.Array:
+                     mesh: Mesh | None = None,
+                     superchunk_words: int | None = None,
+                     sink=None) -> jax.Array | np.ndarray | None:
     """Pipelined RapidRAID decode (paper §III: "pipelined decoding
     operations, faster than classical decoding ... not reported here").
 
@@ -299,7 +341,12 @@ def pipelined_decode(code: ErasureCode, ids, shards, num_chunks: int = 8,
     k x (n_alive - 1) chunks spread over the chain links instead of
     k x n_alive through one NIC, and every node finishes with the decoded
     prefix resident — the dual of the encode chain. The decode matrix and
-    the compiled program are cached per (code, ids, mesh, shapes).
+    the compiled program are cached per (code, ids, mesh, stripe width).
+
+    ``superchunk_words`` / ``sink`` stream the decode exactly like
+    ``pipelined_encode``: positionwise decode applies D per word, so the
+    per-stripe reconstructions concatenate bit-identically to the
+    monolithic decode while only one stripe lives on the devices.
     """
     if not code.positionwise:
         raise ValueError(
@@ -311,12 +358,14 @@ def pipelined_decode(code: ErasureCode, ids, shards, num_chunks: int = 8,
         raise ValueError(
             f"pipelined_decode: shards {shards.shape} must be "
             f"(len(ids)={len(ids)}, B)")
-    _check_chunking(shards.shape[1], code.l, num_chunks, "pipelined_decode")
+    plan = streaming.plan_stream(shards.shape[1], superchunk_words,
+                                 l=code.l, num_chunks=num_chunks)
+    _check_chunking(plan.sc_words, code.l, num_chunks, "pipelined_decode")
     mesh = mesh or make_chain_mesh(len(ids))
     fn = jitcache.get(
-        ("decode", code.cache_key, ids, mesh, shards.shape[1], num_chunks),
+        ("decode", code.cache_key, ids, mesh, plan.sc_words, num_chunks),
         lambda: _build_decode(code, ids, mesh, num_chunks))
-    return fn(shards)
+    return streaming.run_words(fn, shards, plan, sink=sink)
 
 
 def order_chain(node_speeds: np.ndarray, n: int, k: int) -> np.ndarray:

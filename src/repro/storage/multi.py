@@ -36,7 +36,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import compat, gf, jitcache, pipeline
+from repro.core import compat, gf, jitcache, pipeline, streaming
 from repro.core.codes import ErasureCode
 from repro.storage import chain as chain_lib
 
@@ -108,14 +108,21 @@ def _build_encode_many(code: ErasureCode, mesh, num_chunks: int,
 
 
 def pipelined_encode_many(code: ErasureCode, objects, num_chunks: int = 8,
-                          stagger: int = 1, mesh=None,
-                          order=None) -> jax.Array:
+                          stagger: int = 1, mesh=None, order=None,
+                          superchunk_words: int | None = None,
+                          sink=None) -> jax.Array | np.ndarray | None:
     """Archive B_obj objects concurrently: (B_obj, k, B) -> (B_obj, n, B).
 
     One fused shard_map launch; every object's codeword block i materializes
     on the device that stores it, exactly as the single-object chain.
     ``order`` (scheduler placement) assigns device ``order[p]`` to chain
     position p for every chain in the batch.
+
+    Like the single-object chain, this is a wrapper over the streaming
+    super-chunk executor: ``superchunk_words`` streams the whole BATCH
+    stripe by stripe (each stripe one staggered multi-chain launch of the
+    same cached program), ``sink(s, (B_obj, n, W))`` consumes per-stripe
+    results without assembling the batch output.
     """
     if not code.supports_chain_encode:
         raise ValueError(
@@ -127,14 +134,18 @@ def pipelined_encode_many(code: ErasureCode, objects, num_chunks: int = 8,
             f"pipelined_encode_many: objects {objects.shape} must be "
             f"(B_obj, k={code.k}, B)")
     B_obj, _, B = objects.shape
-    chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_encode_many")
+    plan = streaming.plan_stream(B, superchunk_words, l=code.l,
+                                 num_chunks=num_chunks)
+    chain_lib._check_chunking(plan.sc_words, code.l, num_chunks,
+                              "pipelined_encode_many")
     if mesh is not None and order is not None:
         raise ValueError("pass either mesh or order, not both")
     mesh = mesh or chain_lib.make_chain_mesh(code.n, order)
     fn = jitcache.get(
-        ("encode_many", code.cache_key, mesh, B_obj, B, num_chunks, stagger),
+        ("encode_many", code.cache_key, mesh, B_obj, plan.sc_words,
+         num_chunks, stagger),
         lambda: _build_encode_many(code, mesh, num_chunks, stagger))
-    return fn(objects)
+    return streaming.run_words(fn, objects, plan, sink=sink)
 
 
 def _decode_many_shard(local, bp_node, *, k: int, l: int, num_chunks: int,
@@ -191,13 +202,16 @@ def _build_decode_many(code: ErasureCode, ids: tuple[int, ...], mesh,
 
 def pipelined_decode_many(code: ErasureCode, ids, shards,
                           num_chunks: int = 8, stagger: int = 1,
-                          mesh=None) -> jax.Array:
+                          mesh=None, superchunk_words: int | None = None,
+                          sink=None) -> jax.Array | np.ndarray | None:
     """Staggered multi-object pipelined decode (dual of encode_many).
 
     ids: the len(ids) surviving codeword rows (shared across objects, as
     after a node failure every object archived on that node set lost the
     same rows). shards (B_obj, n_alive, B) -> decoded (B_obj, k, B); the
     last chain node finishes holding every object's decoded blocks.
+    ``superchunk_words`` / ``sink``: stream the batch stripe-by-stripe
+    through the streaming executor, as in ``pipelined_encode_many``.
     """
     if not code.positionwise:
         raise ValueError(
@@ -210,9 +224,13 @@ def pipelined_decode_many(code: ErasureCode, ids, shards,
             f"pipelined_decode_many: shards {shards.shape} must be "
             f"(B_obj, len(ids)={len(ids)}, B)")
     B_obj, _, B = shards.shape
-    chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_decode_many")
+    plan = streaming.plan_stream(B, superchunk_words, l=code.l,
+                                 num_chunks=num_chunks)
+    chain_lib._check_chunking(plan.sc_words, code.l, num_chunks,
+                              "pipelined_decode_many")
     mesh = mesh or chain_lib.make_chain_mesh(len(ids))
     fn = jitcache.get(
-        ("decode_many", code.cache_key, ids, mesh, B_obj, B, num_chunks, stagger),
+        ("decode_many", code.cache_key, ids, mesh, B_obj, plan.sc_words,
+         num_chunks, stagger),
         lambda: _build_decode_many(code, ids, mesh, num_chunks, stagger))
-    return fn(shards)
+    return streaming.run_words(fn, shards, plan, sink=sink)

@@ -175,6 +175,23 @@ class NodeStore:
     def has(self, i: int, rel: str) -> bool:
         return os.path.exists(self.path(i, rel))
 
+    def put_stream(self, i: int, rel: str) -> "StreamWriter":
+        """Open a frame-at-a-time write; ``close()`` publishes atomically."""
+        return StreamWriter(self.path(i, rel))
+
+    def get_stream(self, i: int, rel: str, frame_bytes: int):
+        """Iterate an object's bytes in ``frame_bytes`` frames (streaming
+        ``get``): the dual of ``put_stream``, never holding the object."""
+        if frame_bytes < 1:
+            raise ValueError(f"get_stream: frame_bytes must be >= 1, "
+                             f"got {frame_bytes}")
+        with open(self.path(i, rel), "rb") as f:
+            while True:
+                frame = f.read(frame_bytes)
+                if not frame:
+                    return
+                yield frame
+
     def delete(self, i: int, rel: str) -> None:
         p = self.path(i, rel)
         if os.path.exists(p):
@@ -187,6 +204,84 @@ class NodeStore:
 
     def alive(self, i: int, rel: str) -> bool:
         return self.has(i, rel)
+
+
+class StreamWriter:
+    """Frame-at-a-time object write with atomic publish (streaming ``put``).
+
+    The streaming archival path emits one coded frame per super-chunk;
+    frames append to ``<path>.tmp`` and ``close()`` publishes via
+    ``os.replace`` — readers never observe a half-written object, exactly
+    the ``NodeStore.put`` invariant. The writer hashes every frame
+    incrementally, so ``digest()`` equals ``object_store.digest`` of the
+    whole concatenation without the caller ever holding it; ``abort()``
+    discards the partial write (nothing was published). Usable as a
+    context manager (publishes on clean exit, aborts on exception).
+    """
+
+    def __init__(self, path: str):
+        self._final = path
+        self._tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        self._f = open(self._tmp, "wb")
+        self._sha = hashlib.sha256()
+        self.nbytes = 0
+
+    def write(self, frame: bytes) -> None:
+        self._f.write(frame)
+        self._sha.update(frame)
+        self.nbytes += len(frame)
+
+    def digest(self) -> str:
+        """Digest of everything written so far (== ``digest(all frames)``)."""
+        return self._sha.hexdigest()[:16]
+
+    def close(self) -> None:
+        """Atomic publish: the object appears whole or not at all."""
+        if self._f.closed:
+            return
+        self._f.close()
+        os.replace(self._tmp, self._final)
+
+    def abort(self) -> None:
+        """Drop the partial write; the target path is untouched."""
+        if not self._f.closed:
+            self._f.close()
+        if os.path.exists(self._tmp):
+            os.remove(self._tmp)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.close()
+        else:
+            self.abort()
+        return False
+
+
+class _NullStreamWriter(StreamWriter):
+    """Streaming write addressed to a down node: every frame is lost.
+
+    Mirrors ``ChurnNodeStore.put`` dropping the payload — the interface
+    (including the incremental digest, which hashes what WOULD have been
+    written) stays identical so streaming callers need no down-node case.
+    """
+
+    def __init__(self):
+        self._sha = hashlib.sha256()
+        self.nbytes = 0
+
+    def write(self, frame: bytes) -> None:
+        self._sha.update(frame)
+        self.nbytes += len(frame)
+
+    def close(self) -> None:
+        pass
+
+    def abort(self) -> None:
+        pass
 
 
 class ChurnNodeStore(NodeStore):
@@ -221,6 +316,16 @@ class ChurnNodeStore(NodeStore):
         if i in self.down:
             return                      # write addressed to a dead node: lost
         super().put(i, rel, data)
+
+    def put_stream(self, i: int, rel: str) -> StreamWriter:
+        if i in self.down:
+            return _NullStreamWriter()  # every frame is lost, like put
+        return super().put_stream(i, rel)
+
+    def get_stream(self, i: int, rel: str, frame_bytes: int):
+        if i in self.down:
+            raise FileNotFoundError(f"node {i} is down ({rel})")
+        return super().get_stream(i, rel, frame_bytes)
 
     def get(self, i: int, rel: str) -> bytes:
         if i in self.down:

@@ -47,7 +47,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import compat, fault_tolerance, gf, jitcache, pipeline
+from repro.core import compat, fault_tolerance, gf, jitcache, pipeline, streaming
 from repro.core.codes import ErasureCode
 from repro.storage import chain as chain_lib
 
@@ -167,7 +167,9 @@ def _build_repair(code: ErasureCode, missing: tuple[int, ...],
 
 
 def pipelined_repair(code: ErasureCode, ids, shards, missing,
-                     num_chunks: int = 8, mesh=None) -> jax.Array:
+                     num_chunks: int = 8, mesh=None,
+                     superchunk_words: int | None = None,
+                     sink=None) -> jax.Array | np.ndarray | None:
     """Repair ≤ n-k lost shards by streaming k survivors through a chain.
 
     ids: surviving codeword rows; shards (len(ids), B) words. The k chosen
@@ -176,6 +178,12 @@ def pipelined_repair(code: ErasureCode, ids, shards, missing,
     in one kernel launch per tick, and DEVICE 0 (the replacement node)
     finishes holding the repaired (|missing|, B) blocks. Raises ValueError
     if not decodable.
+
+    ``superchunk_words`` streams the repair stripe-by-stripe (per-stripe
+    reverse chains, cross-stripe scheduled per Li et al.): a lost node on
+    a many-stripe object heals without the helpers ever holding their
+    whole shards on-device. ``sink(s, (|missing|, W))`` consumes each
+    repaired stripe as it retires.
     """
     ids = list(ids)
     shards = np.asarray(shards)
@@ -187,12 +195,17 @@ def pipelined_repair(code: ErasureCode, ids, shards, missing,
     missing = tuple(int(m) for m in missing)
     helpers, R = _repair_plan_cached(code, missing, tuple(ids))
     B = shards.shape[1]
-    chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_repair")
+    plan = streaming.plan_stream(B, superchunk_words, l=code.l,
+                                 num_chunks=num_chunks)
+    chain_lib._check_chunking(plan.sc_words, code.l, num_chunks,
+                              "pipelined_repair")
     mesh = mesh or chain_lib.make_chain_mesh(len(helpers))
     fn = jitcache.get(
-        ("repair", code.cache_key, missing, helpers, mesh, B, num_chunks),
+        ("repair", code.cache_key, missing, helpers, mesh, plan.sc_words,
+         num_chunks),
         lambda: _build_repair(code, missing, helpers, R, mesh, num_chunks))
-    return fn(shards[[ids.index(i) for i in helpers]])
+    return streaming.run_words(fn, shards[[ids.index(i) for i in helpers]],
+                               plan, sink=sink)
 
 
 def _build_repair_many(code: ErasureCode, missing: tuple[int, ...],
@@ -222,13 +235,15 @@ def _build_repair_many(code: ErasureCode, missing: tuple[int, ...],
 
 def pipelined_repair_many(code: ErasureCode, ids, shards, missing,
                           num_chunks: int = 8, stagger: int = 1,
-                          mesh=None) -> jax.Array:
+                          mesh=None, superchunk_words: int | None = None,
+                          sink=None) -> jax.Array | np.ndarray | None:
     """B concurrent repairs through ONE staggered shard_map launch.
 
     ids/missing are shared across objects (after a node failure, every
     object archived on that node set lost the same rows). shards
     (B_obj, len(ids), B) -> repaired (B_obj, |missing|, B), materialized on
-    the replacement node (device 0).
+    the replacement node (device 0). ``superchunk_words`` / ``sink``
+    stream the batch stripe-by-stripe as in ``pipelined_repair``.
     """
     ids = list(ids)
     shards = np.asarray(shards)
@@ -240,14 +255,18 @@ def pipelined_repair_many(code: ErasureCode, ids, shards, missing,
     missing = tuple(int(m) for m in missing)
     helpers, R = _repair_plan_cached(code, missing, tuple(ids))
     B_obj, _, B = shards.shape
-    chain_lib._check_chunking(B, code.l, num_chunks, "pipelined_repair_many")
+    plan = streaming.plan_stream(B, superchunk_words, l=code.l,
+                                 num_chunks=num_chunks)
+    chain_lib._check_chunking(plan.sc_words, code.l, num_chunks,
+                              "pipelined_repair_many")
     mesh = mesh or chain_lib.make_chain_mesh(len(helpers))
     fn = jitcache.get(
-        ("repair_many", code.cache_key, missing, helpers, mesh, B_obj, B, num_chunks,
-         stagger),
+        ("repair_many", code.cache_key, missing, helpers, mesh, B_obj,
+         plan.sc_words, num_chunks, stagger),
         lambda: _build_repair_many(code, missing, helpers, R, mesh,
                                    num_chunks, B_obj, stagger))
-    return fn(shards[:, [ids.index(i) for i in helpers]])
+    return streaming.run_words(fn, shards[:, [ids.index(i) for i in helpers]],
+                               plan, sink=sink)
 
 
 # ---------------------------------------------------------------------------

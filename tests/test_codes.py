@@ -257,18 +257,13 @@ def test_cache_key_separates_handbuilt_rapidraid():
     assert hand.cache_key != canonical.cache_key   # ...different cache key
 
 
-def test_deprecated_shims_warn_and_delegate():
-    with pytest.warns(DeprecationWarning, match="make_code is deprecated"):
-        code = rr.make_code(N, K, l=L, seed=0)
-    assert code == rr.RapidRAIDCode.make(N, K, l=L, seed=0)
-    data = _payload(code, B=64)
-    with pytest.warns(DeprecationWarning, match="encode_np is deprecated"):
-        cw = rr.encode_np(code, data)
-    np.testing.assert_array_equal(cw, code.encode_np(data))
-    ids = list(range(1, K + 2))
-    with pytest.warns(DeprecationWarning, match="decode_np is deprecated"):
-        got = rr.decode_np(code, ids, cw[ids])
-    np.testing.assert_array_equal(got, data)
+def test_deprecated_shims_are_gone():
+    """The PR-7 deprecation shims were removed once all callers migrated:
+    ``codes.make`` / the ``ErasureCode`` methods are the only API."""
+    import repro.core as core
+    for name in ("make_code", "encode_np", "decode_np"):
+        assert not hasattr(rr, name), f"rapidraid.{name} shim resurrected"
+        assert not hasattr(core, name), f"repro.core.{name} leaked"
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,7 @@
 """Batched multi-object archival: fused kernels, staggered chains, archive_many.
 
 Acceptance pin: one fused launch over B=8 objects must match 8 independent
-``rapidraid.encode_np`` calls bit-exactly, the staggered multi-chain must
+``code.encode_np`` calls bit-exactly, the staggered multi-chain must
 round-trip through decode, and ``archive_many`` manifests must restore.
 """
 import tempfile
