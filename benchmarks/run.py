@@ -12,6 +12,7 @@
   fig_codes           (beyond paper) code families: LRC / MBR vs RapidRAID
   fig_checkpoint      (beyond paper) device-direct ckpt vs 3-replication
   fig_streaming       (beyond paper) streaming archival footprint/throughput
+  fig_autotune        (beyond paper) autotuner: tuned vs default + model fit
   roofline            EXPERIMENTS.md roofline table from dry-run artifacts
 
 ``python -m benchmarks.run [--only name]``
@@ -22,11 +23,11 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (chain_tuning, fig3_dependencies, fig4_coding_times,
-                        fig5_congestion, fig_checkpoint, fig_codes,
-                        fig_hetero, fig_lifecycle, fig_repair_times,
-                        fig_streaming, fig_throughput, roofline,
-                        table1_resilience, table2_cpu_cost)
+from benchmarks import (fig3_dependencies, fig4_coding_times,
+                        fig5_congestion, fig_autotune, fig_checkpoint,
+                        fig_codes, fig_hetero, fig_lifecycle,
+                        fig_repair_times, fig_streaming, fig_throughput,
+                        roofline, table1_resilience, table2_cpu_cost)
 
 MODULES = [
     ("table1_resilience", table1_resilience),
@@ -41,7 +42,7 @@ MODULES = [
     ("fig_codes", fig_codes),
     ("fig_checkpoint", fig_checkpoint),
     ("fig_streaming", fig_streaming),
-    ("chain_tuning", chain_tuning),
+    ("fig_autotune", fig_autotune),
     ("roofline", roofline),
 ]
 

@@ -130,7 +130,8 @@ def _exhaustive_order(topo: Topology, nodes, k: int, block_bytes: float,
     bw = np.asarray(topo.nic_bw, dtype=float)
     blocks = np.asarray(topo_lib.position_blocks(n, k), dtype=float)
     chunk = block_bytes / num_chunks
-    comp = blocks[None, :] * chunk / cr[perms]                     # (P, n)
+    comp = blocks[None, :] * (chunk / cr[perms]
+                              + topo.tick_quad * chunk * chunk)    # (P, n)
     pos = np.arange(n)
     flows = np.where((pos == 0) | (pos == n - 1), 1.0, 2.0)
     share = bw[perms] / flows[None, :]
@@ -166,8 +167,8 @@ def _swap_polish(topo: Topology, order, k: int, block_bytes: float,
     return order
 
 
-def plan_chain(topo: Topology, k: int, block_bytes: float, *,
-               nodes=None, exhaustive_limit: int = 8,
+def plan_chain(topo: Topology | None, k: int, block_bytes: float, *,
+               nodes=None, n: int | None = None, exhaustive_limit: int = 8,
                candidates=DEFAULT_CHUNK_CANDIDATES) -> ChainPlan:
     """Choose chain placement + chunk count minimizing modeled makespan.
 
@@ -176,7 +177,19 @@ def plan_chain(topo: Topology, k: int, block_bytes: float, *,
     n <= ``exhaustive_limit``, greedy + swap-polish beyond. The chunk count
     is co-optimized: chosen for the seed ordering, the placement searched at
     that count, then re-chosen for the winning placement.
+
+    ``topo=None`` plans against the MEASURED topology: the autotuner's
+    calibrated ``compute_rate``/``tick_overhead`` for this backend
+    (``repro.core.autotune.calibrated_topology``; hand-tuned uniform
+    defaults when no calibration has been recorded). Since a calibrated
+    topology has no node count of its own, pass ``n`` (or ``nodes``).
     """
+    if topo is None:
+        if n is None and nodes is None:
+            raise ValueError("plan_chain: topo=None needs n= or nodes=")
+        from repro.core import autotune
+        topo = autotune.calibrated_topology(n if n is not None
+                                            else len(list(nodes)))
     nodes = list(range(topo.n_nodes)) if nodes is None else list(nodes)
     n = len(nodes)
     if n < 2:
@@ -209,7 +222,7 @@ def _balanced_groups(topo: Topology, n: int, n_groups: int) -> list[list[int]]:
     return [grp for grp in groups if len(grp) == n]
 
 
-def plan_many(topo: Topology, n_objects: int, n: int, k: int,
+def plan_many(topo: Topology | None, n_objects: int, n: int, k: int,
               block_bytes: float, *, stagger: int = 1,
               candidates=DEFAULT_CHUNK_CANDIDATES) -> MultiPlan:
     """Assign B concurrent archival chains to node sets.
@@ -219,7 +232,12 @@ def plan_many(topo: Topology, n_objects: int, n: int, k: int,
     own ``plan_chain``, and objects are dealt to groups by shortest modeled
     finish time (bin-packing on the makespan). Otherwise every object runs
     on the one shared chain, staggered (``repro.storage.multi``).
+    ``topo=None`` plans against the autotuner's calibrated topology for an
+    n-node chain (as in ``plan_chain``).
     """
+    if topo is None:
+        from repro.core import autotune
+        topo = autotune.calibrated_topology(n)
     n_groups = max(1, topo.n_nodes // n)
     if n_groups >= 2:
         groups = _balanced_groups(topo, n, n_groups)

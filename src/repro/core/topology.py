@@ -48,12 +48,17 @@ class Topology:
     node i (full-duplex pool; shared by the node's concurrent chain flows).
     ``hop_latency``: seconds per chain hop (propagation, paid in the fill).
     ``tick_overhead``: seconds of fixed per-tick cost (message/launch/sync).
+    ``tick_quad``: seconds per byte^2 of per-tick working set — models the
+    compute bandwidth degrading once a tick's chunk overflows the cache
+    hierarchy (a host property, uniform across nodes; 0 = the ideal
+    linear-bandwidth model).
     """
 
     compute_rate: tuple[float, ...]
     nic_bw: tuple[float, ...]
     hop_latency: float = 0.2e-3
     tick_overhead: float = 0.0
+    tick_quad: float = 0.0
 
     def __post_init__(self):
         if len(self.compute_rate) != len(self.nic_bw):
@@ -70,10 +75,12 @@ class Topology:
     @classmethod
     def uniform(cls, n: int, compute_rate: float = 400e6,
                 nic_bw: float = 250e6, hop_latency: float = 0.2e-3,
-                tick_overhead: float = 0.0) -> "Topology":
+                tick_overhead: float = 0.0,
+                tick_quad: float = 0.0) -> "Topology":
         return cls(compute_rate=(float(compute_rate),) * n,
                    nic_bw=(float(nic_bw),) * n,
-                   hop_latency=hop_latency, tick_overhead=tick_overhead)
+                   hop_latency=hop_latency, tick_overhead=tick_overhead,
+                   tick_quad=tick_quad)
 
     def with_slow(self, node: int, factor: float) -> "Topology":
         """A copy with node ``node`` slowed by ``factor`` (compute and NIC)."""
@@ -88,14 +95,16 @@ class Topology:
         return {"compute_rate": list(self.compute_rate),
                 "nic_bw": list(self.nic_bw),
                 "hop_latency": self.hop_latency,
-                "tick_overhead": self.tick_overhead}
+                "tick_overhead": self.tick_overhead,
+                "tick_quad": self.tick_quad}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Topology":
         return cls(compute_rate=tuple(float(v) for v in d["compute_rate"]),
                    nic_bw=tuple(float(v) for v in d["nic_bw"]),
                    hop_latency=float(d.get("hop_latency", 0.2e-3)),
-                   tick_overhead=float(d.get("tick_overhead", 0.0)))
+                   tick_overhead=float(d.get("tick_overhead", 0.0)),
+                   tick_quad=float(d.get("tick_quad", 0.0)))
 
 
 def position_blocks(n: int, k: int) -> list[int]:
@@ -119,7 +128,8 @@ def chain_taus(topo: Topology, order, k: int,
     order = list(order)
     n = len(order)
     blocks = position_blocks(n, k)
-    t_comp = [blocks[p] * chunk_bytes / topo.compute_rate[int(order[p])]
+    t_comp = [blocks[p] * (chunk_bytes / topo.compute_rate[int(order[p])]
+                           + topo.tick_quad * chunk_bytes * chunk_bytes)
               for p in range(n)]
     t_link = [chunk_bytes / min(_nic_share(topo, order, p, n),
                                 _nic_share(topo, order, p + 1, n))
@@ -155,6 +165,76 @@ def node_cost(topo: Topology, i: int) -> float:
     """Per-byte chain cost of node i (compute + wire): the 'slowness' key
     the scheduler sorts on."""
     return 1.0 / topo.compute_rate[i] + 1.0 / topo.nic_bw[i]
+
+
+# ---------------------------------------------------------------------------
+# calibration fit: (compute_rate, tick_overhead) from a measured chunk sweep
+# ---------------------------------------------------------------------------
+
+#: effectively-infinite wire for calibrated single-host topologies: on forced
+#: XLA host devices the "network" is shared memory, so the whole per-tick cost
+#: lives in the compute + per-tick-overhead terms the fit below recovers.
+CALIBRATION_NIC_BW = 1e15
+
+
+def fit_chain_constants(samples, n: int, k: int,
+                        block_bytes: float) -> tuple[Topology, np.ndarray]:
+    """Least-squares (compute_rate, tick_quad, tick_overhead) from a sweep.
+
+    ``samples`` is a sequence of ``(num_chunks, wall_seconds)`` measurements
+    of the REAL pipelined chain encode at one ``(n, k, block_bytes)``
+    geometry. On a uniform topology with a negligible wire the makespan
+    model collapses to a form linear in the three constants:
+
+        T(C) = (1/r) * block_bytes * (2k + (C-1)*mb) / C
+             + q * block_bytes^2 * (2k + (C-1)*mb) / C^2
+             + t0 * (C + n - 1)
+
+    (``mb`` = blocks at the busiest position, 2k = total replica blocks down
+    the chain). The quadratic ``q`` (``Topology.tick_quad``) captures the
+    compute bandwidth collapsing when few-chunk plans push the per-tick
+    working set past the cache hierarchy — on this host the one-chunk plan
+    runs ~50x slower than 32 chunks, far beyond what any linear byte model
+    can express; ``q`` is only fitted when the sweep has >= 3 distinct
+    counts (two pin just rate + overhead). Returns the calibrated uniform
+    :class:`Topology` — whose ``chain_makespan`` reproduces the fitted curve
+    exactly — and the per-sample model predictions, in sample order.
+    Replaces the hand-tuned ``compute_rate``/``tick_overhead`` defaults with
+    measured ones (``repro.core.autotune`` persists the result).
+    """
+    samples = [(int(c), float(t)) for c, t in samples]
+    if len({c for c, _ in samples}) < 2:
+        raise ValueError(
+            f"fit_chain_constants: need >= 2 distinct chunk counts, got "
+            f"{sorted({c for c, _ in samples})}")
+    if any(c < 1 or t <= 0 for c, t in samples):
+        raise ValueError(f"fit_chain_constants: bad samples {samples}")
+    mb = max(position_blocks(n, k))
+    C = np.array([c for c, _ in samples], dtype=float)
+    T = np.array([t for _, t in samples], dtype=float)
+    g_bytes = block_bytes * (2 * k + (C - 1) * mb) / C   # x (1/rate)
+    g_quad = g_bytes * block_bytes / C                   # x tick_quad
+    g_ticks = C + n - 1                                  # x tick_overhead
+    with_quad = len({c for c, _ in samples}) >= 3
+    cols = [g_bytes, g_quad, g_ticks] if with_quad else [g_bytes, g_ticks]
+    # rows weighted by 1/T: minimize RELATIVE residuals, so the fast
+    # many-chunk samples are fit as faithfully as the slow one-chunk ones
+    # (plain lstsq would let the largest T dominate the loss)
+    A = np.stack([col / T for col in cols], axis=1)
+    coef, *_ = np.linalg.lstsq(A, np.ones_like(T), rcond=None)
+    inv_rate, quad, t0 = ((coef[0], coef[1], coef[2]) if with_quad
+                          else (coef[0], 0.0, coef[1]))
+    # physical clamps: a tiny/negative coefficient means that term is not
+    # identifiable from the sweep — pin it instead of emitting a nonsense rate
+    inv_rate = max(float(inv_rate), 1e-15)
+    quad = max(float(quad), 0.0)
+    t0 = max(float(t0), 0.0)
+    topo = Topology.uniform(n, compute_rate=1.0 / inv_rate,
+                            nic_bw=CALIBRATION_NIC_BW, hop_latency=0.0,
+                            tick_overhead=t0, tick_quad=quad)
+    pred = np.array([chain_makespan(topo, range(n), k, block_bytes, c)
+                     for c, _ in samples])
+    return topo, pred
 
 
 # ---------------------------------------------------------------------------

@@ -43,6 +43,7 @@ from jax.experimental import pallas as pl
 from repro.core import gf
 
 DEFAULT_BLOCK = 512  # uint32 lanes per tile: 2 KiB/row — k=16 rows fit easily
+DEFAULT_MXU_BLOCK = 1024  # words per MXU tile: bit-lift multiplies rows by l
 
 
 def _encode_body(x_ref, o_ref, *, M: np.ndarray, l: int):
@@ -238,7 +239,8 @@ def _mxu_body(x_ref, mb_ref, o_ref, *, l: int, rows: int, k: int):
 
 
 def gf_encode_mxu_kernel(M: np.ndarray, data_words: jax.Array, l: int,
-                         block: int = 1024, interpret: bool = True):
+                         block: int = DEFAULT_MXU_BLOCK,
+                         interpret: bool = True):
     """Bit-lifted MXU encode: (k, B) words (int32) -> (rows, B) words (int32)."""
     M = np.asarray(M)
     rows, k = M.shape

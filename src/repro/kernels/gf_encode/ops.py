@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gf
+from repro.core import autotune, gf
 from repro.kernels.gf_encode import kernel
 
 
@@ -42,14 +42,29 @@ def pick_tick_block(S: int, preferred: int = kernel.DEFAULT_BLOCK) -> int:
     """Tile width for the per-tick pipeline kernels (chunk length ``S``).
 
     The tick kernels (``chain_step``/``repair_step``) run inside a scanned
-    pipeline, so padding per tick is off the table: the tile must DIVIDE the
-    chunk. Long aligned chunks tile at ``preferred``; anything ragged runs
-    as one whole-chunk tile (fine under interpret, and on TPU a chunk is a
-    block/num_chunks slice — VMEM-sized by construction).
+    pipeline, so padding per tick is off the table: the tile must DIVIDE
+    the chunk. Long aligned chunks tile at ``preferred``; a ragged chunk
+    gets the largest divisor of ``S`` that still fits ``preferred`` (e.g.
+    ``S=1536`` tiles at 384, where the old rule ran one whole-chunk tile
+    blowing the VMEM working set). Only when no useful divisor exists —
+    ``S`` prime, or every fitting divisor under 8 lanes (a near-per-word
+    pallas grid, e.g. ``S=2*997`` whose only fitting divisor is 2) — does
+    it fall back to the single whole-chunk tile.
     """
     if S % preferred == 0:
         return preferred
-    return S
+    if S <= preferred:
+        return S
+    best = 1
+    d = 1
+    while d * d <= S:
+        if S % d == 0:
+            if d <= preferred:
+                best = max(best, d)
+            if S // d <= preferred:
+                best = max(best, S // d)
+        d += 1
+    return best if best >= 8 else S
 
 
 def _pad_tail(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
@@ -71,21 +86,42 @@ def _encode_packed_jit(data_packed, M_key, l, block, interpret):
     return out[..., :Bp] if pad else out
 
 
+def _tuned_encode_block(M_key, dp, l, interpret) -> int:
+    """Tile width for ``encode_packed`` when none was requested: the tuning
+    cache (probing the real jitted kernel on a search-mode miss with
+    concrete data), falling back to the ``pick_block`` heuristic."""
+    Bp = dp.shape[-1]
+    probe = None
+    if autotune.is_concrete(dp):
+        def probe(b):
+            return _encode_packed_jit(dp, M_key, l, pick_block(Bp, b),
+                                      interpret)
+    blk = autotune.kernel_block(
+        "encode_packed", l, Bp, heuristic=pick_block(Bp),
+        candidates=autotune.block_candidates(Bp, kernel.DEFAULT_BLOCK),
+        probe=probe)
+    return pick_block(Bp, blk)
+
+
 def encode_packed(M: np.ndarray, data_packed: jax.Array, l: int,
-                  block: int = kernel.DEFAULT_BLOCK,
+                  block: int | None = None,
                   interpret: bool | None = None) -> jax.Array:
     """Packed bit-plane VPU encode. (k, Bp) uint32 -> (rows, Bp) uint32, or
     batched (O, k, Bp) -> (O, rows, Bp) as one fused launch. Ragged lengths
-    are padded to a whole number of tiles and sliced back."""
+    are padded to a whole number of tiles and sliced back. ``block=None``
+    (the default) resolves the tile width through the tuning cache."""
     if interpret is None:
         interpret = _interpret_default()
     M_key = tuple(tuple(int(v) for v in row) for row in np.asarray(M))
-    block = pick_block(data_packed.shape[-1], block)
+    if block is None:
+        block = _tuned_encode_block(M_key, data_packed, l, interpret)
+    else:
+        block = pick_block(data_packed.shape[-1], block)
     return _encode_packed_jit(data_packed, M_key, l, block, interpret)
 
 
 def encode_words(M: np.ndarray, data: jax.Array, l: int,
-                 block: int = kernel.DEFAULT_BLOCK,
+                 block: int | None = None,
                  interpret: bool | None = None) -> jax.Array:
     """Word-level convenience wrapper: packs, encodes, unpacks.
 
@@ -107,19 +143,107 @@ def _encode_mxu_jit(data_words, M_key, l, block, interpret):
     return out[..., :B] if pad else out
 
 
-def encode_mxu(M: np.ndarray, data: jax.Array, l: int, block: int = 1024,
+def _tuned_mxu_block(M_key, dw, l, interpret) -> int:
+    """``encode_mxu`` tile width from the tuning cache, heuristic
+    ``pick_block(B, DEFAULT_MXU_BLOCK)`` — the old hard-coded 1024 now
+    routed through the same picker as the VPU path."""
+    B = dw.shape[-1]
+    probe = None
+    if autotune.is_concrete(dw):
+        def probe(b):
+            return _encode_mxu_jit(dw, M_key, l, pick_block(B, b), interpret)
+    blk = autotune.kernel_block(
+        "encode_mxu", l, B,
+        heuristic=pick_block(B, kernel.DEFAULT_MXU_BLOCK),
+        candidates=autotune.block_candidates(B, kernel.DEFAULT_MXU_BLOCK),
+        probe=probe)
+    return pick_block(B, blk)
+
+
+def encode_mxu(M: np.ndarray, data: jax.Array, l: int,
+               block: int | None = None,
                interpret: bool | None = None) -> jax.Array:
     """Bit-lifted MXU encode. (k, B) words -> (rows, B) words.
 
     Word counts that do not divide ``block`` are zero-padded to a whole
     number of tiles and sliced back (same pad-and-slice as the VPU path).
+    ``block=None`` resolves through the tuning cache with the
+    ``DEFAULT_MXU_BLOCK`` heuristic.
     """
     if interpret is None:
         interpret = _interpret_default()
     M_key = tuple(tuple(int(v) for v in row) for row in np.asarray(M))
-    block = pick_block(data.shape[-1], block)
-    out = _encode_mxu_jit(data.astype(jnp.int32), M_key, l, block, interpret)
+    dw = data.astype(jnp.int32)
+    if block is None:
+        block = _tuned_mxu_block(M_key, dw, l, interpret)
+    else:
+        block = pick_block(data.shape[-1], block)
+    out = _encode_mxu_jit(dw, M_key, l, block, interpret)
     return out.astype(gf.WORD_DTYPE[l])
+
+
+def _encode_mxu_any(M: np.ndarray, data: jax.Array, l: int,
+                    interpret: bool | None = None) -> jax.Array:
+    """MXU encode for 2-D or batched input: the MXU kernel is strictly
+    (k, B), so a batch rides as a word-axis concat (one launch, same
+    padding rules) and is split back after."""
+    if data.ndim == 2:
+        return encode_mxu(M, data, l, interpret=interpret)
+    O, k, B = data.shape
+    flat = data.transpose(1, 0, 2).reshape(k, O * B)
+    out = encode_mxu(M, flat, l, interpret=interpret)
+    return out.reshape(-1, O, B).transpose(1, 0, 2)
+
+
+def dispatch_for_data(M: np.ndarray, data: jax.Array, l: int,
+                      interpret: bool | None = None) -> str:
+    """Tuned MXU-vs-VPU dispatch (``"vpu"``/``"mxu"``) for this encode.
+
+    On a search-mode cache miss with concrete data, times BOTH real
+    kernels on the actual input and persists the winner per
+    (backend, l, rows, k, B); otherwise cached value or the hand-tuned
+    ``"vpu"`` default.
+    """
+    M = np.asarray(M)
+    probes = None
+    if autotune.is_concrete(data) and autotune.mode() == "search":
+        probes = {
+            "vpu": lambda: encode_words(M, data, l, interpret=interpret),
+            "mxu": lambda: _encode_mxu_any(M, data, l, interpret=interpret),
+        }
+    return autotune.dispatch_for(l, int(M.shape[0]), int(data.shape[-2]),
+                                 int(data.shape[-1]), probes=probes)
+
+
+def encode_auto(M: np.ndarray, data: jax.Array, l: int,
+                interpret: bool | None = None) -> jax.Array:
+    """Dispatch-tuned word-level encode: VPU packed bit-plane or MXU
+    bit-lifted matmul, whichever the tuner measured faster for this
+    (l, shape, backend). Accepts (k, B) or batched (O, k, B) words."""
+    if dispatch_for_data(M, data, l, interpret=interpret) == "mxu":
+        return _encode_mxu_any(M, data, l, interpret=interpret)
+    return encode_words(M, data, l, interpret=interpret)
+
+
+def encode_block_for(M: np.ndarray, data: jax.Array, l: int,
+                     interpret: bool | None = None) -> int:
+    """Resolve (probing in search mode) the tuned ``encode_packed`` tile
+    width for this (k, B) word geometry; used by ``autotune.prewarm``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    M_key = tuple(tuple(int(v) for v in row) for row in np.asarray(M))
+    dp = gf.pack_u32(jnp.asarray(data), l)
+    return _tuned_encode_block(M_key, dp, l, interpret)
+
+
+def mxu_block_for(M: np.ndarray, data: jax.Array, l: int,
+                  interpret: bool | None = None) -> int:
+    """Resolve the tuned ``encode_mxu`` tile width for this geometry."""
+    if interpret is None:
+        interpret = _interpret_default()
+    M_key = tuple(tuple(int(v) for v in row) for row in np.asarray(M))
+    dw = jnp.asarray(data).astype(jnp.int32)
+    return _tuned_mxu_block(M_key, dw, l, interpret)
 
 
 def repair_step(x_in: jax.Array, local: jax.Array, bp: jax.Array, l: int,

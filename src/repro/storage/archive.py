@@ -409,10 +409,8 @@ def _archive_group(store: NodeStore, grp: list[int], acfg: ArchiveConfig,
         # sub-packetized (M_sub, W) layout for regenerating codes, so
         # EVERY family encodes through the same fused GF kernel
         msgs = np.stack([np.asarray(code.to_message(o)) for o in objs_w])
-        Wp = msgs.shape[-1] // gf.LANES[acfg.l]
-        rows = np.asarray(kernel_ops.encode_words(
-            code.G, jnp.asarray(msgs), acfg.l,
-            block=kernel_ops.pick_block(Wp)))
+        rows = np.asarray(kernel_ops.encode_auto(
+            code.G, jnp.asarray(msgs), acfg.l))
         coded_w = rows.reshape(len(grp), code.n, -1)
     out: dict[int, dict] = {}
     for b, step in enumerate(grp):
@@ -891,9 +889,7 @@ def repair_many(store: NodeStore, steps: list[int], acfg: ArchiveConfig,
                 # the plan over it returns the same set and an aligned R
                 _, R = fault_tolerance.repair_plan(code, missing, helpers)
                 packed = gf.pack_u32(jnp.asarray(shards_w), l)
-                fused = kernel_ops.encode_packed(
-                    R, packed, l,
-                    block=kernel_ops.pick_block(packed.shape[-1]))
+                fused = kernel_ops.encode_packed(R, packed, l)
                 repaired_w = np.asarray(gf.unpack_u32(fused, l))
         for b, step in enumerate(grp):
             _place_repaired(store, step, manifests[step], missing,

@@ -30,7 +30,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import compat, gf, jitcache, pipeline, streaming
+from repro.core import autotune, compat, gf, jitcache, pipeline, streaming
 from repro.core.codes import ErasureCode
 
 AXIS = "chain"
@@ -90,10 +90,17 @@ def build_local_blocks(code: ErasureCode, data: np.ndarray) -> np.ndarray:
     return np.where(valid[:, :, None], data[idx], 0).astype(data.dtype)
 
 
-def _tick_kernel_args(S: int):
-    """(kernel ops module, tile width) for a per-tick fused launch."""
+def _tick_kernel_args(S: int, l: int):
+    """(kernel ops module, tile width) for a per-tick fused launch.
+
+    The width comes from the tuning cache when one is populated (a
+    cache-only lookup — this runs inside jit traces, so it never probes),
+    falling back to the ``pick_tick_block`` divisor heuristic.
+    """
+    from repro.core import autotune
     from repro.kernels.gf_encode import ops as kernel_ops
-    return kernel_ops, kernel_ops.pick_tick_block(S)
+    blk = autotune.tick_block(l, S, heuristic=kernel_ops.pick_tick_block(S))
+    return kernel_ops, blk
 
 
 def _encode_shard(local, bp_psi, bp_xi, *, l: int, num_chunks: int):
@@ -108,7 +115,7 @@ def _encode_shard(local, bp_psi, bp_xi, *, l: int, num_chunks: int):
     bp_xi = bp_xi[0]
     max_b, Bp = local.shape
     S = Bp // num_chunks
-    kernel_ops, blk = _tick_kernel_args(S)
+    kernel_ops, blk = _tick_kernel_args(S, l)
 
     def step_fn(wire_in, out, ch, active):
         chunk = lax.dynamic_slice(local, (0, ch * S), (max_b, S))
@@ -199,7 +206,7 @@ def _build_encode(code: ErasureCode, mesh: Mesh, num_chunks: int):
     return jax.jit(_encode_core(code, mesh, num_chunks))
 
 
-def pipelined_encode(code: ErasureCode, data, num_chunks: int = 8,
+def pipelined_encode(code: ErasureCode, data, num_chunks: int | None = None,
                      mesh: Mesh | None = None, order=None,
                      superchunk_words: int | None = None,
                      sink=None) -> jax.Array | np.ndarray | None:
@@ -234,6 +241,8 @@ def pipelined_encode(code: ErasureCode, data, num_chunks: int = 8,
     if data.ndim != 2 or data.shape[0] != code.k:
         raise ValueError(
             f"pipelined_encode: data {data.shape} must be (k={code.k}, B)")
+    if num_chunks is None:   # tuned (or hand-tuned default) chunk count
+        num_chunks = autotune.num_chunks_for("encode", code, data.shape[1])
     plan = streaming.plan_stream(data.shape[1], superchunk_words,
                                  l=code.l, num_chunks=num_chunks)
     _check_chunking(plan.sc_words, code.l, num_chunks, "pipelined_encode")
@@ -278,7 +287,7 @@ def _decode_shard(local, bp_node, *, k: int, l: int, num_chunks: int):
     planes = bp_node[0]       # (k, l)
     Bp = local.shape[-1]
     S = Bp // num_chunks
-    kernel_ops, blk = _tick_kernel_args(S)
+    kernel_ops, blk = _tick_kernel_args(S, l)
 
     def step_fn(wire_in, out, ch, active):
         chunk = lax.dynamic_slice(local, (ch * S,), (S,))
@@ -326,7 +335,8 @@ def _build_decode(code: ErasureCode, ids: tuple[int, ...], mesh: Mesh,
     return jax.jit(_decode_core(code, ids, mesh, num_chunks))
 
 
-def pipelined_decode(code: ErasureCode, ids, shards, num_chunks: int = 8,
+def pipelined_decode(code: ErasureCode, ids, shards,
+                     num_chunks: int | None = None,
                      mesh: Mesh | None = None,
                      superchunk_words: int | None = None,
                      sink=None) -> jax.Array | np.ndarray | None:
@@ -358,6 +368,9 @@ def pipelined_decode(code: ErasureCode, ids, shards, num_chunks: int = 8,
         raise ValueError(
             f"pipelined_decode: shards {shards.shape} must be "
             f"(len(ids)={len(ids)}, B)")
+    if num_chunks is None:
+        num_chunks = autotune.num_chunks_for("decode", code, shards.shape[1],
+                                             chain_len=len(ids))
     plan = streaming.plan_stream(shards.shape[1], superchunk_words,
                                  l=code.l, num_chunks=num_chunks)
     _check_chunking(plan.sc_words, code.l, num_chunks, "pipelined_decode")

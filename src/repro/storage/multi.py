@@ -36,7 +36,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import compat, gf, jitcache, pipeline, streaming
+from repro.core import autotune, compat, gf, jitcache, pipeline, streaming
 from repro.core.codes import ErasureCode
 from repro.storage import chain as chain_lib
 
@@ -56,7 +56,7 @@ def _encode_many_shard(local, bp_psi, bp_xi, *, l: int, num_chunks: int,
     bp_xi = bp_xi[0]
     B_obj, max_b, Bp = local.shape
     S = Bp // num_chunks
-    kernel_ops, blk = chain_lib._tick_kernel_args(S)
+    kernel_ops, blk = chain_lib._tick_kernel_args(S, l)
 
     def step_fn(wire_b, out_b, b, ch, active):
         """One object's chunk: wire_b (S,), out_b (Bp,), b/ch traced."""
@@ -107,8 +107,9 @@ def _build_encode_many(code: ErasureCode, mesh, num_chunks: int,
     return jax.jit(_encode_many_core(code, mesh, num_chunks, stagger))
 
 
-def pipelined_encode_many(code: ErasureCode, objects, num_chunks: int = 8,
-                          stagger: int = 1, mesh=None, order=None,
+def pipelined_encode_many(code: ErasureCode, objects,
+                          num_chunks: int | None = None,
+                          stagger: int | None = None, mesh=None, order=None,
                           superchunk_words: int | None = None,
                           sink=None) -> jax.Array | np.ndarray | None:
     """Archive B_obj objects concurrently: (B_obj, k, B) -> (B_obj, n, B).
@@ -134,6 +135,11 @@ def pipelined_encode_many(code: ErasureCode, objects, num_chunks: int = 8,
             f"pipelined_encode_many: objects {objects.shape} must be "
             f"(B_obj, k={code.k}, B)")
     B_obj, _, B = objects.shape
+    if num_chunks is None:
+        num_chunks = autotune.num_chunks_for("encode_many", code, B,
+                                             extra_key=(B_obj,))
+    if stagger is None:
+        stagger = autotune.stagger_for(code, B_obj, num_chunks)
     plan = streaming.plan_stream(B, superchunk_words, l=code.l,
                                  num_chunks=num_chunks)
     chain_lib._check_chunking(plan.sc_words, code.l, num_chunks,
@@ -155,7 +161,7 @@ def _decode_many_shard(local, bp_node, *, k: int, l: int, num_chunks: int,
     planes = bp_node[0]       # (k, l)
     B_obj, Bp = local.shape
     S = Bp // num_chunks
-    kernel_ops, blk = chain_lib._tick_kernel_args(S)
+    kernel_ops, blk = chain_lib._tick_kernel_args(S, l)
 
     def step_fn(wire_b, out_b, b, ch, active):
         chunk = lax.dynamic_slice(local, (b, ch * S), (1, S))[0]
@@ -201,7 +207,8 @@ def _build_decode_many(code: ErasureCode, ids: tuple[int, ...], mesh,
 
 
 def pipelined_decode_many(code: ErasureCode, ids, shards,
-                          num_chunks: int = 8, stagger: int = 1,
+                          num_chunks: int | None = None,
+                          stagger: int | None = None,
                           mesh=None, superchunk_words: int | None = None,
                           sink=None) -> jax.Array | np.ndarray | None:
     """Staggered multi-object pipelined decode (dual of encode_many).
@@ -224,6 +231,12 @@ def pipelined_decode_many(code: ErasureCode, ids, shards,
             f"pipelined_decode_many: shards {shards.shape} must be "
             f"(B_obj, len(ids)={len(ids)}, B)")
     B_obj, _, B = shards.shape
+    if num_chunks is None:
+        num_chunks = autotune.num_chunks_for("decode_many", code, B,
+                                             chain_len=len(ids),
+                                             extra_key=(B_obj,))
+    if stagger is None:
+        stagger = autotune.stagger_for(code, B_obj, num_chunks)
     plan = streaming.plan_stream(B, superchunk_words, l=code.l,
                                  num_chunks=num_chunks)
     chain_lib._check_chunking(plan.sc_words, code.l, num_chunks,

@@ -47,7 +47,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import compat, fault_tolerance, gf, jitcache, pipeline, streaming
+from repro.core import (autotune, compat, fault_tolerance, gf, jitcache,
+                        pipeline, streaming)
 from repro.core.codes import ErasureCode
 from repro.storage import chain as chain_lib
 
@@ -101,7 +102,7 @@ def _repair_shard_body(local, bp_node, *, rows, l, num_chunks, reverse=True,
     planes = bp_node[0]       # (rows, l)
     Bp = local.shape[-1]
     S = Bp // num_chunks
-    kernel_ops, blk = chain_lib._tick_kernel_args(S)
+    kernel_ops, blk = chain_lib._tick_kernel_args(S, l)
 
     def contribute(chunk, acc):
         return kernel_ops.repair_step(acc, chunk[None], planes, l, block=blk)
@@ -167,7 +168,7 @@ def _build_repair(code: ErasureCode, missing: tuple[int, ...],
 
 
 def pipelined_repair(code: ErasureCode, ids, shards, missing,
-                     num_chunks: int = 8, mesh=None,
+                     num_chunks: int | None = None, mesh=None,
                      superchunk_words: int | None = None,
                      sink=None) -> jax.Array | np.ndarray | None:
     """Repair ≤ n-k lost shards by streaming k survivors through a chain.
@@ -195,6 +196,9 @@ def pipelined_repair(code: ErasureCode, ids, shards, missing,
     missing = tuple(int(m) for m in missing)
     helpers, R = _repair_plan_cached(code, missing, tuple(ids))
     B = shards.shape[1]
+    if num_chunks is None:
+        num_chunks = autotune.num_chunks_for("repair", code, B,
+                                             chain_len=len(helpers))
     plan = streaming.plan_stream(B, superchunk_words, l=code.l,
                                  num_chunks=num_chunks)
     chain_lib._check_chunking(plan.sc_words, code.l, num_chunks,
@@ -234,7 +238,8 @@ def _build_repair_many(code: ErasureCode, missing: tuple[int, ...],
 
 
 def pipelined_repair_many(code: ErasureCode, ids, shards, missing,
-                          num_chunks: int = 8, stagger: int = 1,
+                          num_chunks: int | None = None,
+                          stagger: int | None = None,
                           mesh=None, superchunk_words: int | None = None,
                           sink=None) -> jax.Array | np.ndarray | None:
     """B concurrent repairs through ONE staggered shard_map launch.
@@ -255,6 +260,12 @@ def pipelined_repair_many(code: ErasureCode, ids, shards, missing,
     missing = tuple(int(m) for m in missing)
     helpers, R = _repair_plan_cached(code, missing, tuple(ids))
     B_obj, _, B = shards.shape
+    if num_chunks is None:
+        num_chunks = autotune.num_chunks_for("repair_many", code, B,
+                                             chain_len=len(helpers),
+                                             extra_key=(B_obj,))
+    if stagger is None:
+        stagger = autotune.stagger_for(code, B_obj, num_chunks)
     plan = streaming.plan_stream(B, superchunk_words, l=code.l,
                                  num_chunks=num_chunks)
     chain_lib._check_chunking(plan.sc_words, code.l, num_chunks,
@@ -341,10 +352,7 @@ def degraded_read(code: ErasureCode, ids, shard_slices, block_ids,
     shard_slices = np.asarray(shard_slices)
     D = code.decode_matrix(list(ids))[list(block_ids)]
     W = shard_slices.shape[1]
-    lanes = gf.LANES[code.l]
     chain_lib._check_chunking(W, code.l, 1, "degraded_read")
     packed = gf.pack_u32(jnp.asarray(shard_slices), code.l)
-    out = kernel_ops.encode_packed(D, packed, code.l,
-                                   block=kernel_ops.pick_block(W // lanes),
-                                   interpret=interpret)
+    out = kernel_ops.encode_packed(D, packed, code.l, interpret=interpret)
     return np.asarray(gf.unpack_u32(out, code.l))
