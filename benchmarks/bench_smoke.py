@@ -36,6 +36,7 @@ from benchmarks import fig_codes
 from benchmarks import fig_hetero
 from benchmarks import fig_lifecycle
 from benchmarks import fig_repair_times as figr
+from benchmarks import fig_serving
 from benchmarks import fig_streaming as figs
 from benchmarks import fig_throughput as figt
 
@@ -86,6 +87,16 @@ def extract_speedups(results: dict) -> dict[str, float]:
         # arithmetic on the makespan model, so blocking
         sp["model_autotune_fit_recovery"] = at["fit_rate_ratio"]
         sp["model_autotune_plan_gain"] = at["plan_gain"]
+    srv = results["model"].get("serving", {})
+    if srv:
+        # paired FIFO-queue serving model, one seeded request stream under
+        # three background regimes — deterministic, so blocking.
+        # yield_gain: how much p99 the admission controller buys back vs
+        # uncontrolled background work; p99_bound: 2x-of-idle SLO headroom
+        # (>= 1.0 means the controlled p99 holds the 2x bound)
+        sp["model_serving_yield_gain"] = srv["yield_gain"]
+        sp["model_serving_p99_bound"] = (
+            2.0 * srv["idle"]["p99"] / srv["admission"]["p99"])
     life = results["model"].get("lifecycle", {})
     if life:
         # paired Monte Carlo loss ratio (replication/RapidRAID, Laplace
@@ -243,6 +254,7 @@ def main() -> int:
             "ckpt": figc.model_overhead(),
             "streaming": figs.network_model(),
             "autotune": figa.model_check(),
+            "serving": fig_serving.network_model(),
         },
         "real": {},
     }
@@ -290,6 +302,10 @@ def main() -> int:
         real["autotune"] = figa.real_autotune()
     except Exception as e:  # noqa: BLE001
         real["autotune"] = {"error": str(e)[:500]}
+    try:
+        real["serving"] = fig_serving.real_soak(ticks=25)
+    except Exception as e:  # noqa: BLE001
+        real["serving"] = {"error": str(e)[:500]}
     results["speedups"] = extract_speedups(results)
     results["meta"]["wall_s"] = round(time.time() - t0, 1)
     with open(args.out, "w") as f:
@@ -331,6 +347,16 @@ def main() -> int:
                      / rat["kernel_tuned_s"] >= 0.9)
     if "error" not in real["lifecycle"]:
         ok = ok and real["lifecycle"]["lost_objects"] == 0
+    # serving gates: with admission control the modeled read p99 must hold
+    # the 2x-of-idle SLO that uncontrolled background work must break —
+    # the whole point of the yield mechanism — and the real engine soak
+    # must return only correct bytes
+    srv = results["model"]["serving"]
+    ok = ok and srv["admission"]["p99"] <= 2.0 * srv["idle"]["p99"]
+    ok = ok and srv["uncontrolled"]["p99"] > 2.0 * srv["idle"]["p99"]
+    if "error" not in real["serving"]:
+        ok = ok and real["serving"]["wrong_bytes"] == 0
+        ok = ok and real["serving"]["lost_objects"] == 0
     failures: list[str] = []
     if args.baseline and os.path.exists(args.baseline):
         failures = diff_against_baseline(results["speedups"], args.baseline)

@@ -13,6 +13,7 @@
   fig_checkpoint      (beyond paper) device-direct ckpt vs 3-replication
   fig_streaming       (beyond paper) streaming archival footprint/throughput
   fig_autotune        (beyond paper) autotuner: tuned vs default + model fit
+  fig_serving         (beyond paper) read SLOs under background work
   roofline            EXPERIMENTS.md roofline table from dry-run artifacts
 
 ``python -m benchmarks.run [--only name]``
@@ -26,8 +27,9 @@ import traceback
 from benchmarks import (fig3_dependencies, fig4_coding_times,
                         fig5_congestion, fig_autotune, fig_checkpoint,
                         fig_codes, fig_hetero, fig_lifecycle,
-                        fig_repair_times, fig_streaming, fig_throughput,
-                        roofline, table1_resilience, table2_cpu_cost)
+                        fig_repair_times, fig_serving, fig_streaming,
+                        fig_throughput, roofline, table1_resilience,
+                        table2_cpu_cost)
 
 MODULES = [
     ("table1_resilience", table1_resilience),
@@ -43,6 +45,7 @@ MODULES = [
     ("fig_checkpoint", fig_checkpoint),
     ("fig_streaming", fig_streaming),
     ("fig_autotune", fig_autotune),
+    ("fig_serving", fig_serving),
     ("roofline", roofline),
 ]
 

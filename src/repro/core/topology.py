@@ -168,6 +168,79 @@ def node_cost(topo: Topology, i: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# serving-path congestion accounting (netsim's background-flow algebra)
+# ---------------------------------------------------------------------------
+
+#: NIC flows one background work unit (an archival chain hop or a repair
+#: chain hop crossing a node) adds to every node it touches — matches
+#: ``benchmarks.netsim.churn_config``'s per-repair extra-flow accounting.
+FLOWS_PER_BACKGROUND_UNIT = 2.0
+
+
+def with_background(topo: Topology, bg_units: float,
+                    base_flows: float = 1.0) -> Topology:
+    """Topology as a foreground read sees it with background work running.
+
+    Mirrors ``benchmarks.netsim.churn_config``: each of ``bg_units``
+    concurrent background work units (archival chains, repair chains)
+    adds :data:`FLOWS_PER_BACKGROUND_UNIT` flows to every NIC that a
+    foreground flow must share fairly with, shrinking the foreground
+    share from ``nic_bw / base_flows`` to
+    ``nic_bw * base_flows / (base_flows + extra)``. ``bg_units=0``
+    returns the topology unchanged; this is the 1.95-4.8x netsim
+    congestion result expressed as a read-path price.
+    """
+    if bg_units < 0:
+        raise ValueError(f"bg_units must be >= 0, got {bg_units}")
+    if bg_units == 0:
+        return topo
+    extra = FLOWS_PER_BACKGROUND_UNIT * float(bg_units)
+    share = base_flows / (base_flows + extra)
+    return dataclasses.replace(
+        topo, nic_bw=tuple(bw * share for bw in topo.nic_bw))
+
+
+def hot_read_time(topo: Topology, holder: int, nbytes: float,
+                  bg_units: float = 0.0) -> float:
+    """Modeled seconds to read ``nbytes`` from a hot replica on ``holder``.
+
+    One flow, one hop: the replica holder streams the bytes at its
+    (possibly congested) NIC share, plus one hop of propagation.
+    """
+    t = with_background(topo, bg_units)
+    return nbytes / t.nic_bw[int(holder)] + t.hop_latency
+
+
+def coded_read_time(topo: Topology, reader: int, helpers, nbytes: float,
+                    bg_units: float = 0.0, degraded: bool = False,
+                    replan_penalty: float = 2.0e-3) -> float:
+    """Modeled seconds for a k-fanin coded read of ``nbytes`` of payload.
+
+    The RapidRAID code is non-systematic, so EVERY archive-tier read
+    pulls a word-range from all ``k`` helper shards (``k * nbytes / k``
+    = ``nbytes`` of wire per helper fan-in is wrong — each helper sends
+    ``nbytes / k`` of its shard, but all k flows converge on the
+    reader's NIC, so the reader-side fan-in carries ``nbytes`` total)
+    and decodes with the cached inverse program. Cost: the slower of
+    the reader's fan-in and the slowest helper's share, plus GF decode
+    compute at the reader, plus one hop. ``degraded=True`` adds
+    ``replan_penalty`` — building/fetching the alternative decode
+    program for the surviving-shard set (cached after first use, but
+    the model prices the cold path so the SLO bound is conservative).
+    """
+    t = with_background(topo, bg_units)
+    helpers = [int(h) for h in helpers]
+    if not helpers:
+        raise ValueError("coded_read_time: need at least one helper")
+    per_helper = nbytes / len(helpers)
+    t_helpers = max(per_helper / t.nic_bw[h] for h in helpers)
+    t_fanin = nbytes / t.nic_bw[int(reader)]
+    t_decode = nbytes / topo.compute_rate[int(reader)]
+    base = max(t_helpers, t_fanin) + t_decode + t.hop_latency
+    return base + (replan_penalty if degraded else 0.0)
+
+
+# ---------------------------------------------------------------------------
 # calibration fit: (compute_rate, tick_overhead) from a measured chunk sweep
 # ---------------------------------------------------------------------------
 

@@ -69,6 +69,50 @@ class ArchiveConfig:
                           seed=self.seed)
 
 
+@dataclasses.dataclass(frozen=True)
+class ReadResult:
+    """What a read returned AND how it was served.
+
+    ``data``: the payload — ``(k, B)`` uint8 blocks from
+    :func:`restore_blocks_ex`, raw ``bytes`` from :func:`read_range_ex`.
+    ``served_from``: which path produced the bytes —
+
+    * ``"hot"`` — replica-tier read (including the retained-replica
+      fallback of a two-phase migration);
+    * ``"coded"`` — archive-tier decode with the FULL shard set alive
+      (RapidRAID is non-systematic, so even the healthy path is a k-fanin
+      decode — "coded" means nothing had to be routed around);
+    * ``"degraded"`` — archive-tier decode that routed around missing or
+      corrupt shards.
+
+    ``nodes``: the physical nodes that served payload bytes for this
+    read (replica holders, decode helpers); liveness probes of nodes that
+    contributed nothing are not counted. ``healed``: True when
+    ``heal=True`` actually re-materialized shards on this read (reads
+    doubling as scrubs). Serving metrics and tests consume these fields
+    instead of inferring the path from side effects.
+    """
+
+    data: "np.ndarray | bytes"
+    served_from: str
+    nodes: tuple[int, ...]
+    healed: bool
+    step: int
+
+    def __post_init__(self):
+        if self.served_from not in ("hot", "coded", "degraded"):
+            raise ValueError(
+                f"served_from must be 'hot', 'coded' or 'degraded', "
+                f"got {self.served_from!r}")
+
+
+def _result(data, served_from: str, nodes, healed: bool,
+            step: int) -> ReadResult:
+    return ReadResult(data=data, served_from=served_from,
+                      nodes=tuple(sorted({int(x) for x in nodes})),
+                      healed=bool(healed), step=int(step))
+
+
 def _words(blocks_u8: np.ndarray, l: int) -> np.ndarray:
     dt = gf.WORD_DTYPE[l]
     return blocks_u8.view(dt)
@@ -106,8 +150,16 @@ def hot_save(store: NodeStore, step: int, blocks: np.ndarray,
 
 def hot_load(store: NodeStore, step: int, manifest: dict) -> np.ndarray:
     """Read each block from any node still holding a replica."""
+    return _hot_load_ex(store, step, manifest)[0]
+
+
+def _hot_load_ex(store: NodeStore, step: int,
+                 manifest: dict) -> tuple[np.ndarray, list[int]]:
+    """(blocks, replica nodes actually read) — the node-tracking core of
+    ``hot_load`` that ``restore_blocks_ex`` builds its ReadResult from."""
     k, B = manifest["k"], manifest["block_bytes"]
     out = np.zeros((k, B), dtype=np.uint8)
+    touched: list[int] = []
     for j in range(k):
         holders = [i for i, held in enumerate(manifest["placement"])
                    if j in held]
@@ -117,11 +169,12 @@ def hot_load(store: NodeStore, step: int, manifest: dict) -> np.ndarray:
                 raw = store.get(node, rel)
                 if digest(raw) == manifest["digests"][j]:
                     out[j] = np.frombuffer(raw, dtype=np.uint8)
+                    touched.append(node)
                     break
         else:
             raise FileNotFoundError(
                 f"hot block {j} of step {step} lost on all replicas")
-    return out
+    return out, touched
 
 
 # ---------------------------------------------------------------------------
@@ -585,17 +638,32 @@ def restore_blocks(store: NodeStore, step: int, acfg: ArchiveConfig,
 
     ``heal=True``: when the read detects missing coded shards (and the step
     is still recoverable), re-materialize them via ``repair`` before
-    returning — reads double as scrubs.
+    returning — reads double as scrubs. Raw-array shim over
+    :func:`restore_blocks_ex` (which additionally reports how the read
+    was served).
+    """
+    return restore_blocks_ex(store, step, acfg, heal=heal).data
+
+
+def restore_blocks_ex(store: NodeStore, step: int, acfg: ArchiveConfig,
+                      heal: bool = False) -> ReadResult:
+    """:class:`ReadResult` with ``data`` = (k, B) uint8 original blocks.
+
+    The full-information form of ``restore_blocks``: same bytes, plus the
+    serve path (hot / coded / degraded), the nodes that funded the read,
+    and whether ``heal=True`` actually repaired shards along the way.
     """
     manifest = get_manifest(store, step)
     if manifest["tier"] == "hot":
-        return hot_load(store, step, manifest)
+        blocks, nodes = _hot_load_ex(store, step, manifest)
+        return _result(blocks, "hot", nodes, False, step)
     if manifest["tier"] == "archive" and manifest.get("streaming"):
         return _restore_streaming(store, step, acfg, manifest, heal=heal)
     alive = _alive_coded(store, step, manifest)
+    healed = False
     if heal and manifest["tier"] == "archive" and len(alive) < manifest["n"]:
         try:
-            repair(store, step, acfg)
+            healed = bool(repair(store, step, acfg))
         except ValueError:
             # undecodable survivors: with retained replicas the hot tier
             # below still serves the read; without them, fall through to
@@ -608,7 +676,8 @@ def restore_blocks(store: NodeStore, step: int, acfg: ArchiveConfig,
         if manifest.get("hot_retained"):
             # two-phase migration: the replicas were never reclaimed, so
             # the hot tier still backs the object
-            return hot_load(store, step, manifest)
+            blocks, nodes = _hot_load_ex(store, step, manifest)
+            return _result(blocks, "hot", nodes, healed, step)
         raise FileNotFoundError(
             f"step {step}: only {len(alive)} of n={manifest['n']} coded "
             f"blocks alive, need k={manifest['k']}")
@@ -633,7 +702,9 @@ def restore_blocks(store: NodeStore, step: int, acfg: ArchiveConfig,
             raise ValueError(
                 f"step {step}: decoded block {j} does not match the archived "
                 f"digest — corrupt shard set or code mismatch")
-    return blocks
+    served = "coded" if len(alive) == manifest["n"] else "degraded"
+    return _result(blocks, served,
+                   [manifest["perm"][pos] for pos in ids], healed, step)
 
 
 def _manifest_code(manifest: dict) -> codes.ErasureCode:
@@ -642,8 +713,8 @@ def _manifest_code(manifest: dict) -> codes.ErasureCode:
 
 
 def _restore_streaming(store: NodeStore, step: int, acfg: ArchiveConfig,
-                       manifest: dict, heal: bool = False) -> np.ndarray:
-    """Stripe-at-a-time restore of a streamed archive.
+                       manifest: dict, heal: bool = False) -> ReadResult:
+    """Stripe-at-a-time restore of a streamed archive, as a ReadResult.
 
     Reads only each stripe's word range of k helper shards
     (``NodeStore.get_range``) and verifies it against the manifest's
@@ -659,10 +730,11 @@ def _restore_streaming(store: NodeStore, step: int, acfg: ArchiveConfig,
     plan = streaming.plan_stream(B // wb, stream["superchunk_bytes"] // wb,
                                  l=l, num_chunks=stream["num_chunks"])
     perm = manifest["perm"]
+    healed = False
     if heal and any(not store.has(perm[pos], ARC.format(step=step, i=pos))
                     for pos in range(manifest["n"])):
         try:
-            repair(store, step, acfg)
+            healed = bool(repair(store, step, acfg))
         except ValueError:
             if not manifest.get("hot_retained"):
                 raise
@@ -683,7 +755,8 @@ def _restore_streaming(store: NodeStore, step: int, acfg: ArchiveConfig,
         if helpers is None:
             if manifest.get("hot_retained"):
                 # two-phase migration: the replicas still back the object
-                return hot_load(store, step, manifest)
+                blocks, nodes = _hot_load_ex(store, step, manifest)
+                return _result(blocks, "hot", nodes, healed, step)
             raise FileNotFoundError(
                 f"step {step}: only {len(alive_ids)} decodable of "
                 f"n={manifest['n']} coded blocks, need k={k}")
@@ -713,7 +786,8 @@ def _restore_streaming(store: NodeStore, step: int, acfg: ArchiveConfig,
             raise ValueError(
                 f"step {step}: decoded block {j} does not match the archived "
                 f"digest — corrupt shard set or code mismatch")
-    return out
+    served = "coded" if not dead else "degraded"
+    return _result(out, served, [perm[h] for h in helpers], healed, step)
 
 
 def _place_repaired(store: NodeStore, step: int, manifest: dict,
@@ -907,6 +981,40 @@ def read_range(store: NodeStore, step: int, acfg: ArchiveConfig,
                offset: int, nbytes: int, heal: bool = False) -> bytes:
     """Serve object bytes [offset, offset+nbytes) without full-object decode.
 
+    Raw-bytes shim over :func:`read_range_ex`; see there for the serve-path
+    semantics the full-information form additionally reports.
+    """
+    return read_range_ex(store, step, acfg, offset, nbytes, heal=heal).data
+
+
+def _hot_range(store: NodeStore, step: int, manifest: dict,
+               offset: int, end: int) -> tuple[bytes, list[int]]:
+    """Serve [offset, end) from surviving replicas; -> (bytes, holder nodes).
+
+    Used for the hot tier proper AND as the ``hot_retained`` fallback when
+    an archived object's survivors are not decodable mid two-phase reclaim.
+    """
+    B = manifest["block_bytes"]
+    out = bytearray()
+    nodes = []
+    for j in range(offset // B, (end - 1) // B + 1):
+        a = max(offset, j * B) - j * B
+        b = min(end, (j + 1) * B) - j * B
+        rel = HOT.format(step=step, j=j)
+        holders = [i for i, held in enumerate(manifest["placement"])
+                   if j in held and store.has(i, rel)]
+        if not holders:
+            raise FileNotFoundError(
+                f"hot block {j} of step {step} lost on all replicas")
+        out += store.get_range(holders[0], rel, a, b - a)
+        nodes.append(holders[0])
+    return bytes(out), nodes
+
+
+def read_range_ex(store: NodeStore, step: int, acfg: ArchiveConfig,
+                  offset: int, nbytes: int, heal: bool = False) -> ReadResult:
+    """:class:`ReadResult` with ``data`` = object bytes [offset, offset+nbytes).
+
     Hot tier: slice reads straight from a surviving replica. Archive tier:
     a DEGRADED READ — only the covering word range of k surviving shards is
     read from disk (``NodeStore.get_range``) and only the touched blocks'
@@ -934,41 +1042,41 @@ def read_range(store: NodeStore, step: int, acfg: ArchiveConfig,
             f"{step}'s {k * B}-byte object (offset={offset}, "
             f"nbytes={nbytes})")
     if nbytes == 0:
-        return b""
+        served = "hot" if manifest["tier"] == "hot" else "coded"
+        return _result(b"", served, [], False, step)
     j0, j1 = offset // B, (end - 1) // B
 
     if manifest["tier"] == "hot":
-        out = bytearray()
-        for j in range(j0, j1 + 1):
-            a = max(offset, j * B) - j * B
-            b = min(end, (j + 1) * B) - j * B
-            rel = HOT.format(step=step, j=j)
-            holders = [i for i, held in enumerate(manifest["placement"])
-                       if j in held and store.has(i, rel)]
-            if not holders:
-                raise FileNotFoundError(
-                    f"hot block {j} of step {step} lost on all replicas")
-            out += store.get_range(holders[0], rel, a, b - a)
-        return bytes(out)
+        out, nodes = _hot_range(store, step, manifest, offset, end)
+        return _result(out, "hot", nodes, False, step)
 
     if manifest["tier"] != "archive":
         # classical tier: fall back to full restore (no RapidRAID decode)
-        blocks = restore_blocks(store, step, acfg)
-        return blocks.reshape(-1)[offset:end].tobytes()
+        res = restore_blocks_ex(store, step, acfg)
+        return _result(res.data.reshape(-1)[offset:end].tobytes(),
+                       res.served_from, res.nodes, res.healed, step)
 
     code = _manifest_code(manifest)
     if not code.positionwise:
         # sub-packetized shards have no positionwise word ranges — serve
         # the range from a full (digest-verified) restore
-        blocks = restore_blocks(store, step, acfg, heal=heal)
-        return blocks.reshape(-1)[offset:end].tobytes()
+        res = restore_blocks_ex(store, step, acfg, heal=heal)
+        return _result(res.data.reshape(-1)[offset:end].tobytes(),
+                       res.served_from, res.nodes, res.healed, step)
 
     perm = manifest["perm"]
+    healed = False
     if heal and any(not store.has(perm[pos], ARC.format(step=step, i=pos))
                     for pos in range(manifest["n"])):
         # existence probe only — slice reads cannot digest-check, so heal
         # here targets lost shards; a full scrub is repair()/repair_many()
-        repair(store, step, acfg)
+        try:
+            healed = bool(repair(store, step, acfg))
+        except ValueError:
+            # undecodable survivors: retained replicas (below) still serve
+            # the range; without them the decodability check raises clearly
+            if not manifest.get("hot_retained"):
+                raise
         manifest = get_manifest(store, step)
         perm = manifest["perm"]
     alive_ids = [pos for pos in range(manifest["n"])
@@ -976,6 +1084,12 @@ def read_range(store: NodeStore, step: int, acfg: ArchiveConfig,
     try:
         chosen = codes.independent_rows(code.G[alive_ids], k, l)
     except ValueError as e:
+        if manifest.get("hot_retained"):
+            # two-phase migration window: survivors are not decodable but
+            # the replicas were never reclaimed — the hot tier still backs
+            # the object (same fallback as restore_blocks_ex)
+            out, nodes = _hot_range(store, step, manifest, offset, end)
+            return _result(out, "hot", nodes, healed, step)
         raise FileNotFoundError(
             f"step {step}: survivors not decodable ({e})") from None
     helpers = [alive_ids[p] for p in chosen]
@@ -999,7 +1113,9 @@ def read_range(store: NodeStore, step: int, acfg: ArchiveConfig,
             for h in helpers])
         row = _u8(gf.gf_matmul_np(D[[j]], slices_w, l))[0]
         out += row[a - lo:b - lo].tobytes()
-    return bytes(out)
+    served = "coded" if len(alive_ids) == manifest["n"] else "degraded"
+    return _result(bytes(out), served, [perm[h] for h in helpers],
+                   healed, step)
 
 
 def publish_device_archive(store: NodeStore, step: int, acfg: ArchiveConfig,

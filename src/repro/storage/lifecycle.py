@@ -74,7 +74,7 @@ class ClusterLifecycle:
 
     def __init__(self, root: str, acfg: arc.ArchiveConfig,
                  lcfg: LifecycleConfig, trace: churn_lib.ChurnTrace,
-                 topology=None):
+                 topology=None, admission=None):
         if trace.n_nodes != acfg.n:
             raise ValueError(f"trace is for {trace.n_nodes} nodes, "
                              f"code needs n={acfg.n}")
@@ -85,6 +85,12 @@ class ClusterLifecycle:
         self.acfg = acfg
         self.lcfg = lcfg
         self.topology = topology
+        # optional repro.core.admission.AdmissionController: migration and
+        # routine coded scrub draw one token per step and defer when denied
+        # (retrying next tick); repairs racing undecodability bypass it.
+        # None (the default) = every phase runs unthrottled, exactly the
+        # pre-admission engine.
+        self.admission = admission
         self.events = trace.by_tick()
         self.tick_now = 0
         self.next_step = 1
@@ -189,6 +195,12 @@ class ClusterLifecycle:
                      for j in range(manifest["k"]))
             if ok:
                 ready.append(step)
+        if self.admission is not None:
+            # one token per archived step; a denied step simply stays hot
+            # and retries next tick (it is already past archive_age, so
+            # deferral costs replica bytes, never durability)
+            ready = [step for step in ready
+                     if self.admission.acquire("archive")]
         if not ready:
             return []
         policy = self.lcfg.code_policy
@@ -212,8 +224,14 @@ class ClusterLifecycle:
         ``backlog`` counts archived steps still carrying missing shards
         after this pass (their home nodes are down); ``at_risk`` counts
         steps within one further loss of undecodability.
+
+        With an admission controller attached, each healable step draws
+        one token; a step within one further loss of undecodability (and
+        not backed by retained replicas) is URGENT and bypasses the
+        bucket — throttling must never turn bounded churn into data loss.
+        Denied steps stay in the backlog and retry next tick.
         """
-        heal: list[int] = []
+        heal: list[tuple[int, bool]] = []
         for step, st in self.objects.items():
             if st["state"] not in ("archived", "sealed"):
                 continue
@@ -228,13 +246,22 @@ class ClusterLifecycle:
                      if pos not in missing]
             # decodability is the CODE's call (LRC is not MDS: a loss
             # pattern within n-k can still be fatal; MBR tolerates more)
-            if missing and not arc._manifest_code(manifest).decodable(alive):
+            code = arc._manifest_code(manifest)
+            if missing and not code.decodable(alive):
                 if manifest.get("hot_retained"):
                     continue            # replicas still back the object
                 st["state"] = "lost"
                 continue
             if any(self.store.is_up(perm[pos]) for pos in missing):
-                heal.append(step)
+                urgent = (not manifest.get("hot_retained")
+                          and any(not code.decodable(
+                                      [p for p in alive if p != q])
+                                  for q in alive))
+                heal.append((step, urgent))
+        if self.admission is not None:
+            heal = [(step, urgent) for step, urgent in heal
+                    if self.admission.acquire("repair", urgent=urgent)]
+        heal = [step for step, _ in heal]
         repaired = 0
         if heal:
             rows = arc.repair_many(self.store, heal, self.acfg,
@@ -341,8 +368,12 @@ class ClusterLifecycle:
 
     # -- the tick ----------------------------------------------------------
 
-    def tick(self) -> dict:
+    def tick(self, foreground_load: float | None = None) -> dict:
         t = self.tick_now
+        if self.admission is not None:
+            # one refill per tick, scaled by the serving layer's foreground
+            # read load (None = idle: the backlog drains at full rate)
+            self.admission.begin_tick(foreground_load or 0.0)
         fails, joins = self._apply_churn(t)
         born = self._arrive(t)
         manifests = self._manifests()
@@ -368,6 +399,12 @@ class ClusterLifecycle:
             "lost_objects": states.count("lost"),
             **self._account(manifests),
         }
+        if self.admission is not None:
+            # admission accounting only when a controller is attached, so
+            # admission-free runs keep their exact pre-admission rows
+            row["bg_granted"] = self.admission.tick_granted
+            row["bg_urgent"] = self.admission.tick_urgent
+            row["bg_denied"] = self.admission.tick_denied
         self.metrics.append(row)
         self.tick_now += 1
         return row
